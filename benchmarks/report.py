@@ -1,0 +1,81 @@
+"""Regenerate the EXPERIMENTS.md §Roofline tables from experiments/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import sys
+
+HEADER = ("| cell | dom | bound_s | compute_s | memory_s | collective_s "
+          "| useful | roofline | GB/dev | fits16GB |")
+SEP = "|---|---|---|---|---|---|---|---|---|---|"
+
+
+def _row(d) -> str:
+    rl = d["roofline"]
+    mem = d["memory_per_device"]
+    return (f"| {d['cell']} | {rl['dominant']} | {rl['bound_s']:.4g} "
+            f"| {rl['compute_s']:.3g} | {rl['memory_s']:.3g} "
+            f"| {rl['collective_s']:.3g} "
+            f"| {rl['useful_flop_fraction']:.2f} | {rl['roofline_fraction']:.2f} "
+            f"| {mem['total_gb']:.1f} | {'y' if mem['fits_16gb_hbm'] else 'n'} |")
+
+
+def table(pattern: str, dryrun_dir: str, sort_key=None) -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, pattern))):
+        rows.append(json.load(open(f)))
+    if sort_key:
+        rows.sort(key=sort_key)
+    return "\n".join([HEADER, SEP] + [_row(d) for d in rows])
+
+
+def multipod_table(dryrun_dir: str) -> str:
+    """single vs multi side-by-side for a representative subset."""
+    picks = ["qwen3-32b@train_4k", "jamba-1.5-large-398b@train_4k",
+             "deepseek-moe-16b@train_4k", "qwen3-1.7b@decode_32k",
+             "internvl2-76b@prefill_32k", "mamba2-370m@long_500k"]
+    out = ["| cell | mesh | bound_s | dominant | collective_s | GB/dev |",
+           "|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*__opt.json"))):
+        d = json.load(open(f))
+        if d["cell"] not in picks:
+            continue
+        rl = d["roofline"]
+        out.append(f"| {d['cell']} | {d['mesh']} | {rl['bound_s']:.4g} "
+                   f"| {rl['dominant']} | {rl['collective_s']:.3g} "
+                   f"| {d['memory_per_device']['total_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> int:
+    dryrun_dir = "experiments/dryrun"
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+
+    roofline = table("*__single__opt.json", dryrun_dir,
+                     sort_key=lambda d: d["cell"])
+    text = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n### |\n---|\Z)",
+        "<!-- ROOFLINE_TABLE -->\n" + roofline + "\n",
+        text, flags=re.S,
+    )
+    text = re.sub(
+        r"<!-- MULTIPOD_TABLE -->.*?(?=\n---|\Z)",
+        "<!-- MULTIPOD_TABLE -->\n" + multipod_table(dryrun_dir) + "\n",
+        text, flags=re.S,
+    )
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    n = len(glob.glob(os.path.join(dryrun_dir, "*__single__opt.json")))
+    print(f"EXPERIMENTS.md tables regenerated ({n} single-pod cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

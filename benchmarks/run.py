@@ -1,0 +1,77 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig3_vectorization]
+    PYTHONPATH=src python -m benchmarks.run --out experiments/bench
+
+Writes one CSV per benchmark and prints each table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+import time
+
+
+def _write_csv(path: str, rows) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    for r in rows[1:]:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def _print_table(name: str, rows) -> None:
+    print(f"\n== {name} " + "=" * max(0, 66 - len(name)))
+    if not rows:
+        print("(no rows)")
+        return
+    keys = list(rows[0].keys())
+    widths = {k: max(len(str(k)), *(len(str(r.get(k, ""))) for r in rows)) for k in keys}
+    print("  ".join(str(k).ljust(widths[k]) for k in keys))
+    for r in rows:
+        print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--out", default="experiments/bench")
+    args = ap.parse_args(argv)
+
+    from benchmarks.figures import ALL
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = {args.only: ALL[args.only]} if args.only else ALL
+    failed = []
+    for name, fn in todo.items():
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — report all benchmark failures
+            import traceback
+
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+            continue
+        _write_csv(os.path.join(args.out, f"{name}.csv"), rows)
+        _print_table(name, rows)
+        print(f"[{name}: {len(rows)} rows in {time.time() - t0:.1f}s]")
+    if failed:
+        print(f"\nFAILED: {failed}")
+        return 1
+    print(f"\nall {len(todo)} benchmarks written to {args.out}/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

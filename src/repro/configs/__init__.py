@@ -1,0 +1,144 @@
+"""Architecture registry + ShapeDtypeStruct input specs for every cell.
+
+``get_config(arch)`` / ``get_smoke_config(arch)`` return ModelConfigs;
+``input_specs(cfg, shape)`` returns the ShapeDtypeStruct stand-ins for the
+step function that the (arch x shape) cell lowers:
+
+* train_*   -> ``train_step``  : tokens/labels (+ modality stubs)
+* prefill_* -> ``prefill``     : prompt tokens (+ modality stubs)
+* decode_*  -> ``decode_step`` : one new token + a seq_len KV/SSM cache
+
+Shape applicability (DESIGN.md §4): ``long_500k`` only for sub-quadratic
+archs (mamba2, jamba); every other (arch x shape) cell runs.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_ARCH_MODULES = {
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "internvl2-76b": "internvl2_76b",
+    "mamba2-370m": "mamba2_370m",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "olmo-1b": "olmo_1b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "whisper-large-v3": "whisper_large_v3",
+    "gpt2-124m": "gpt2_124m",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _ARCH_MODULES if a != "gpt2-124m"]
+ALL_ARCHS: List[str] = list(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).FULL
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False  # full-attention archs skip 500k decode (DESIGN.md §4)
+    return True
+
+
+def cells(include_paper_arch: bool = False):
+    """All applicable (arch, shape) cells."""
+    archs = ALL_ARCHS if include_paper_arch else ASSIGNED_ARCHS
+    out = []
+    for a in archs:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            if shape_applicable(cfg, s):
+                out.append((a, s.name))
+    return out
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation; weak-type-correct; shardable.  The dict keys match
+    the keyword arguments of the step functions in ``repro.train.steps``.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cdtype = cfg.compute_dtype
+
+    if not shape_applicable(cfg, shape):
+        raise ValueError(f"{cfg.name} x {shape.name} is skipped (see DESIGN.md §4)")
+
+    if cfg.is_encoder_decoder:
+        s_enc = max(S // 4, 8)  # stubbed 2x stride-2 conv frontend
+        if shape.kind == "train":
+            return {
+                "enc_frames": _sds((B, s_enc, cfg.d_model), cdtype),
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "enc_frames": _sds((B, s_enc, cfg.d_model), cdtype),
+                "tokens": _sds((B, S), jnp.int32),
+            }
+        # decode: one token over a seq_len self-KV cache + cross-KV
+        from repro.models import whisper as whisper_mod
+
+        cache = jax.eval_shape(
+            lambda: whisper_mod.init_dec_cache(cfg, B, S, s_enc)
+        )
+        return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}
+
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_tokens
+        s_text = S - n_img
+        if shape.kind == "train":
+            return {
+                "img_embeds": _sds((B, n_img, cfg.d_model), cdtype),
+                "tokens": _sds((B, s_text), jnp.int32),
+                "labels": _sds((B, s_text), jnp.int32),
+            }
+        if shape.kind == "prefill":
+            return {
+                "img_embeds": _sds((B, n_img, cfg.d_model), cdtype),
+                "tokens": _sds((B, s_text), jnp.int32),
+            }
+
+    if shape.kind == "train":
+        return {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    # decode: one new token with a seq_len cache
+    from repro.models import transformer as tf_mod
+
+    cache = jax.eval_shape(lambda: tf_mod.init_cache(cfg, B, S))
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,35 @@
+"""Qwen3-1.7B — dense, GQA kv=8, qk-norm.
+
+[hf:Qwen/Qwen3-8B family; hf]  28L, d_model=2048, 16H (GQA kv=8),
+d_ff=6144, vocab=151936.
+"""
+
+from repro.configs.base import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab=151936,
+    qk_norm=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-1.7b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    qk_norm=True,
+    param_dtype="float32",
+    compute_dtype="float32",
+)

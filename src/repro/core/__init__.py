@@ -1,0 +1,19 @@
+"""Core library: the paper's contribution as composable JAX-side modules.
+
+- hw:            hardware models (Grace SVE-128, TPU v5e/v5p)
+- counters:      PMU-analogue events from lowered/compiled XLA artifacts
+- metrics:       VB, R_ins_reduction, AI, lane utilization (paper Eq. 1)
+- roofline:      adapted roofline (paper Eq. 2) + three-term TPU roofline
+- decision_tree: the paper's Fig. 8 four-class classifier
+- profiler:      configure/start/stop/print ROI API (paper Sec. 3.1)
+"""
+
+from repro.core import hw, counters, metrics, roofline, decision_tree, profiler  # noqa: F401
+from repro.core.decision_tree import PerfClass, classify  # noqa: F401
+from repro.core.metrics import (  # noqa: F401
+    VectorizationReport,
+    arithmetic_intensity,
+    instruction_reduction,
+    vectorization_bound,
+)
+from repro.core.roofline import adapted_roofline, three_term  # noqa: F401

@@ -1,0 +1,415 @@
+"""While-aware structural cost model over post-optimization HLO text.
+
+Why this exists (the paper's Sec. 3.1 lesson, replayed on XLA artifacts):
+``compiled.cost_analysis()`` is the obvious "hardware counter" for a dry-run
+roofline — and it is *wrong* for any program with ``lax.scan``/``while``:
+XLA counts the loop body ONCE, not trip-count times (validated in
+tests/test_hlo_cost.py, exactly like the paper validating PMU events and
+rejecting STALL_BACKEND_MEM).  Every model in this framework scans over
+layers, so cost_analysis under-reports FLOPs and bytes by ~n_layers.
+
+This module re-derives the three roofline inputs structurally from the HLO
+text, walking the call graph with per-computation multipliers:
+
+* ``flops``             — dot/convolution FLOPs (MXU-eligible) plus a 1-FLOP/
+                          element estimate for fusion outputs (VPU work).
+* ``traffic_bytes``     — HBM traffic model: operand+output bytes of every
+                          *memory-level* op (fusions, dots, convs, copies,
+                          collectives, dynamic slices); ops inside fusion
+                          computations move no HBM bytes.  Control plumbing
+                          (tuple/gte/parameter/bitcast/while shells) is free.
+* ``collective_bytes``  — operand bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute,
+                          by kind.
+
+Multipliers: a ``while`` body and condition execute ``trip_count`` times
+(extracted from the canonical XLA counted-loop pattern: the condition's
+``compare(%iv, %K), direction=LT`` against a constant); fusion/call/
+conditional computations inherit the caller's multiplier.  Unknown trip
+counts fall back to 1 and are reported in ``unknown_trip_counts``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.counters import (
+    _COLLECTIVE_KINDS,
+    _SHAPE_RE,
+    shape_bytes,
+    shape_elements,
+)
+
+# ---------------------------------------------------------------------------
+# HLO text -> computations
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^((?:\([^()]*(?:\([^()]*\)[^()]*)*\)|\S+))\s+([\w\-]+)\(")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|calls|body|condition|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w\.\-]+))"
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+# XLA annotates counted loops: backend_config={"known_trip_count":{"n":"8"},...}
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    out_shape: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def operand_shapes(self, op: "_Op") -> List[str]:
+        """Shapes of an op's operands.  Scheduled HLO prints operands as bare
+        ``%name`` references; resolve them against this computation's symbol
+        table (falling back to inline shapes when printed)."""
+        region = _operands_region(op.line)
+        out: List[str] = []
+        for token in _split_top_level(region):
+            token = token.strip()
+            if not token:
+                continue
+            if _SHAPE_RE.search(token):
+                out.append(token)
+                continue
+            m = re.search(r"%([\w\.\-]+)", token)
+            if m and m.group(1) in self.shapes:
+                out.append(self.shapes[m.group(1)])
+        return out
+
+
+def _split_top_level(region: str) -> List[str]:
+    """Split an operand region on commas not nested in (), {} or []."""
+    parts, depth, cur = [], 0, []
+    for c in region:
+        if c in "({[":
+            depth += 1
+        elif c in ")}]":
+            depth -= 1
+        if c == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(c)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
+def parse_computations(hlo_text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            stripped = line.strip()
+            m = _COMP_HEADER_RE.match(stripped)
+            if m and stripped.endswith("{") and "->" in stripped:
+                current = _Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            continue
+        if line.strip() == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        mo = _OPCODE_RE.match(rhs)
+        if not mo:
+            continue
+        out_shape, opcode = mo.group(1), mo.group(2)
+        op = _Op(m.group(1), opcode, out_shape, line)
+        current.ops.append(op)
+        current.shapes[op.name] = out_shape
+    if current is not None:
+        comps[current.name] = current
+    return comps
+
+
+def _called_computations(line: str) -> List[str]:
+    out = []
+    for m in _CALLED_RE.finditer(line):
+        if m.group(1) is not None:  # {a, b} list form
+            for name in m.group(1).split(","):
+                name = name.strip().lstrip("%")
+                if name:
+                    out.append(name)
+        else:
+            out.append(m.group(2))
+    return out
+
+
+def _while_body_cond(line: str) -> Tuple[Optional[str], Optional[str]]:
+    body = cond = None
+    mb = re.search(r"body=%?([\w\.\-]+)", line)
+    mc = re.search(r"condition=%?([\w\.\-]+)", line)
+    if mb:
+        body = mb.group(1)
+    if mc:
+        cond = mc.group(1)
+    return body, cond
+
+
+def trip_count_of(cond_comp: _Computation, while_line: str = "") -> Optional[int]:
+    """Trip count of a counted loop.
+
+    Preference order: an explicit ``trip_count=N`` backend annotation on the
+    while line, else the comparison constant in the condition computation
+    (canonical scan lowering: iv starts at 0, step 1, compare LT K).
+    """
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    consts = [int(c) for op in cond_comp.ops for c in _CONST_RE.findall(op.line)]
+    if consts:
+        return max(consts)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-op structural costs
+# ---------------------------------------------------------------------------
+
+_DOT_LINE_RE = re.compile(r"\bdot\((.*?)\)(?:,|$)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONV_WINDOW_RE = re.compile(r"window=\{[^}]*?size=([\dx]+)")
+
+# ops whose operands/outputs move HBM bytes (when not inside a fusion comp)
+_MEMORY_OPCODES = {
+    "fusion", "dot", "convolution", "copy", "copy-start", "transpose",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "sort", "fft", "broadcast", "iota", "concatenate", "slice",
+    "pad", "reverse", "reduce-window", "select-and-scatter", "cholesky",
+    "triangular-solve", "rng", "exponential", "add", "multiply", "subtract",
+    "divide", "maximum", "minimum", "compare", "select", "tanh", "convert",
+    "reshape",
+} | set(_COLLECTIVE_KINDS) | {k + "-start" for k in _COLLECTIVE_KINDS}
+
+# pure plumbing: never HBM traffic
+_FREE_OPCODES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "custom-call",
+    "partition-id", "replica-id", "all-gather-done", "all-reduce-done",
+    "collective-permute-done", "copy-done", "async-done", "async-start",
+    "get-dimension-size", "opt-barrier",
+}
+
+
+def _operands_region(line: str) -> str:
+    """Text between the opcode's '(' and its matching ')'."""
+    mo = re.search(r"\b[\w\-]+\(", line)
+    if not mo:
+        return ""
+    depth, start = 0, None
+    for i in range(mo.end() - 1, len(line)):
+        c = line[i]
+        if c == "(":
+            if depth == 0:
+                start = i + 1
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0 and start is not None:
+                return line[start:i]
+    return ""
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    out_elems = shape_elements(op.out_shape)
+    operand_shapes = comp.operand_shapes(op)
+    mc = _CONTRACT_RE.search(op.line)
+    if not operand_shapes or not mc:
+        return 0.0
+    lhs = _SHAPE_RE.findall(operand_shapes[0])
+    if not lhs:
+        return 0.0
+    lhs_dims = [int(d) for d in lhs[0][1].split(",") if d]
+    k = 1
+    for ci in mc.group(1).split(","):
+        if ci and int(ci) < len(lhs_dims):
+            k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    out_elems = shape_elements(op.out_shape)
+    mw = _CONV_WINDOW_RE.search(op.line)
+    window = 1
+    if mw:
+        for w in mw.group(1).split("x"):
+            window *= int(w)
+    operand_shapes = comp.operand_shapes(op)
+    cin = 1
+    if len(operand_shapes) >= 2:
+        rhs = _SHAPE_RE.findall(operand_shapes[1])
+        if rhs:
+            rhs_dims = [int(d) for d in rhs[0][1].split(",") if d]
+            if rhs_dims:
+                cin = min(rhs_dims)
+    return 2.0 * out_elems * window * cin
+
+
+# ---------------------------------------------------------------------------
+# the cost walk
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Structural, loop-scaled cost of one compiled module (PER DEVICE)."""
+
+    mxu_flops: float = 0.0
+    vpu_flop_estimate: float = 0.0
+    nonvec_flops: float = 0.0  # fft/sort/rng/scalar-while work: no lane parallelism
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_count_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    gather_bytes: float = 0.0
+    while_trip_counts: List[int] = dataclasses.field(default_factory=list)
+    unknown_trip_counts: int = 0
+
+    @property
+    def flops(self) -> float:
+        return self.mxu_flops + self.vpu_flop_estimate
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["flops"] = self.flops
+        return d
+
+
+def _collective_kind(opcode: str) -> Optional[str]:
+    base = opcode[:-6] if opcode.endswith("-start") else opcode
+    return base if base in _COLLECTIVE_KINDS else None
+
+
+def cost_of_module(hlo_text: str) -> HloCost:
+    comps = parse_computations(hlo_text)
+    cost = HloCost()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None and comps:
+        entry = list(comps.values())[0]
+    if entry is None:
+        return cost
+
+    # computation -> (multiplier, counts_memory) jobs; a computation may be
+    # visited multiple times (e.g. shared fusions) — costs add per call site.
+    stack: List[Tuple[str, float, bool]] = [(entry.name, 1.0, True)]
+    seen_guard = 0
+
+    while stack:
+        seen_guard += 1
+        if seen_guard > 100_000:  # malformed module safety valve
+            break
+        name, mult, memory_level = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body, cond = _while_body_cond(op.line)
+                trip = None
+                if cond and cond in comps:
+                    trip = trip_count_of(comps[cond], op.line)
+                if trip is None:
+                    trip = 1
+                    cost.unknown_trip_counts += 1
+                else:
+                    cost.while_trip_counts.append(trip)
+                if body:
+                    stack.append((body, mult * trip, memory_level))
+                if cond and cond in comps:
+                    # condition work is negligible; skip
+                    pass
+                continue
+            called = _called_computations(op.line)
+            if oc == "fusion":
+                # fusion interior: flops yes, memory no
+                for c in called:
+                    stack.append((c, mult, False))
+            elif oc in ("call", "conditional"):
+                for c in called:
+                    stack.append((c, mult, memory_level))
+            elif oc in ("reduce", "sort", "scatter", "select-and-scatter",
+                        "reduce-window", "map") and called:
+                pass  # tiny scalar to_apply bodies: ignore
+
+            # --- flops ---
+            if oc == "dot":
+                cost.mxu_flops += mult * _dot_flops(op, comp)
+            elif oc == "convolution":
+                cost.mxu_flops += mult * _conv_flops(op, comp)
+            elif oc in ("fft", "sort", "rng", "rng-bit-generator"):
+                # library/serial structure defeats lane vectorization (the
+                # paper's FFTW finding); ~5 log-factor flops per element
+                est = 5.0 * mult * shape_elements(op.out_shape)
+                cost.vpu_flop_estimate += est
+                cost.nonvec_flops += est
+            elif oc in ("scatter", "dynamic-update-slice"):
+                # in-place updates: charge the UPDATE elements, not the
+                # whole buffer (a (E*C, d) MoE dispatch buffer is not 1e9
+                # flops of work per scatter)
+                operand_elems = [shape_elements(s) for s in comp.operand_shapes(op)]
+                upd = (sum(operand_elems) - max(operand_elems)
+                       if operand_elems else shape_elements(op.out_shape))
+                cost.vpu_flop_estimate += mult * upd
+            elif oc == "fusion" or oc not in _FREE_OPCODES:
+                # elementwise estimate: 1 flop per output element
+                cost.vpu_flop_estimate += mult * shape_elements(op.out_shape)
+
+            # --- collectives ---
+            kind = _collective_kind(oc)
+            if kind is not None:
+                nbytes = sum(shape_bytes(s) for s in comp.operand_shapes(op))
+                if nbytes == 0.0:
+                    nbytes = shape_bytes(op.out_shape)
+                cost.collective_bytes += mult * nbytes
+                cost.collective_bytes_by_kind[kind] = (
+                    cost.collective_bytes_by_kind.get(kind, 0.0) + mult * nbytes
+                )
+                cost.collective_count_by_kind[kind] = (
+                    cost.collective_count_by_kind.get(kind, 0) + int(mult)
+                )
+
+            # --- memory traffic ---
+            if memory_level and oc not in _FREE_OPCODES:
+                if oc == "dynamic-update-slice":
+                    # in-place on TPU: only the update slice moves (read+write);
+                    # charging the whole buffer would bill a 32k-token KV cache
+                    # per decoded token.
+                    operand_bytes = [shape_bytes(s) for s in comp.operand_shapes(op)]
+                    update = (sum(operand_bytes) - max(operand_bytes)
+                              if operand_bytes else 0.0)
+                    traffic = 2.0 * update
+                elif oc in ("dynamic-slice", "gather"):
+                    traffic = 2.0 * shape_bytes(op.out_shape)  # read + write
+                else:
+                    traffic = shape_bytes(op.out_shape)
+                    traffic += sum(shape_bytes(s) for s in comp.operand_shapes(op))
+                cost.traffic_bytes += mult * traffic
+
+            # gathers are random-access traffic wherever they appear —
+            # XLA often fuses them, but the loads still chase pointers
+            if oc in ("gather", "scatter"):
+                cost.gather_bytes += mult * shape_bytes(op.out_shape)
+            elif memory_level and oc == "dynamic-slice":
+                cost.gather_bytes += mult * shape_bytes(op.out_shape)
+
+    return cost

@@ -1,0 +1,274 @@
+"""The paper's adapted roofline model (Eq. 2) + the three-term TPU roofline.
+
+Two layers:
+
+1. ``adapted_roofline`` — the paper's model verbatim: a scalar ceiling, a
+   vectorized ceiling boosted by VLEN/ELEN, and inflection points
+   AI_IRR = peak/BW and AI_IRV = AI_IRR * VLEN/ELEN.  Reducing ELEN (or
+   lengthening VLEN) raises the compute ceiling AND moves the inflection
+   right — which is how vectorization flips compute-bound kernels into
+   memory-bound ones (paper Fig. 7, red triangles).
+
+2. ``three_term`` — the deployment roofline for a (arch x shape x mesh) cell:
+
+       compute    = FLOPs            / (chips * peak_flops(dtype))
+       memory     = HBM bytes        / (chips * hbm_bw)
+       collective = collective bytes / (chips * ici_bw)
+
+   The dominant term is the bottleneck; roofline fraction = dominant-term
+   bound / achievable-time model.  All inputs are GLOBAL quantities (see
+   counters.events_from_compiled).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import hw
+from repro.core.counters import Events
+from repro.core.metrics import arithmetic_intensity, vectorization_bound
+
+
+# ---------------------------------------------------------------------------
+# Paper Eq. 2 — scalar vs vectorized inflection points
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptedRoofline:
+    """Paper's roofline for one (chip, dtype): ceilings + inflection points."""
+
+    chip: str
+    dtype: str
+    scalar_peak: float  # FLOP/s, vectorization disabled
+    vector_peak: float  # FLOP/s, ideal vectorization (= scalar * VB)
+    bw: float  # bytes/s
+    ai_irr: float  # scalar inflection (paper: AI_IRR)
+    ai_irv: float  # vectorized inflection (paper: AI_IRV = AI_IRR * VLEN/ELEN)
+    vb: float
+
+    def attainable(self, ai: float, vectorized: bool = True) -> float:
+        """Attainable FLOP/s at arithmetic intensity ``ai``."""
+        peak = self.vector_peak if vectorized else self.scalar_peak
+        return min(peak, ai * self.bw)
+
+    def predicted_speedup(self, ai: float) -> float:
+        """Vectorization speedup the model predicts at intensity ``ai``.
+
+        Saturates at VB in the compute-bound region and decays toward 1 in
+        the memory-bound region — the paper's Fig. 6 curve.
+        """
+        s = self.attainable(ai, True) / max(self.attainable(ai, False), 1e-30)
+        return max(1.0, s)
+
+    def region(self, ai: float, vectorized: bool = True) -> str:
+        knee = self.ai_irv if vectorized else self.ai_irr
+        return "memory-bound" if ai < knee else "compute-bound"
+
+
+def adapted_roofline(
+    chip: hw.ChipSpec, dtype: str, *, scalar_dtype: str | None = None
+) -> AdaptedRoofline:
+    vb = vectorization_bound(chip, dtype)
+    if scalar_dtype is None:
+        scalar_dtype = "scalar_" + dtype if ("scalar_" + dtype) in chip.peak_flops else "scalar"
+    scalar_peak = (
+        chip.peak_flops[scalar_dtype]
+        if scalar_dtype in chip.peak_flops
+        else chip.peak(dtype) / vb
+    )
+    vector_peak = (
+        chip.peak(dtype) if dtype in chip.peak_flops else scalar_peak * vb
+    )
+    ai_irr = scalar_peak / chip.hbm_bw
+    # paper Eq. 2: AI_IRV = AI_IRR * VLEN/ELEN — equivalently vector_peak/BW
+    ai_irv = vector_peak / chip.hbm_bw
+    return AdaptedRoofline(
+        chip=chip.name,
+        dtype=dtype,
+        scalar_peak=scalar_peak,
+        vector_peak=vector_peak,
+        bw=chip.hbm_bw,
+        ai_irr=ai_irr,
+        ai_irv=ai_irv,
+        vb=vb,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Three-term roofline for distributed cells
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Per-step lower-bound times, in seconds, for one (arch, shape, mesh)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+    dtype: str
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0  # 6*N*D (dense) / 6*N_active*D (MoE); 0 if n/a
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time (no overlap assumed between
+        the dominant term and the rest; perfectly overlapped otherwise)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.flops <= 0 or self.model_flops <= 0:
+            return 0.0
+        return min(self.model_flops / self.flops, 10.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound that is UNAVOIDABLE work: useful-FLOP
+        time or the minimal-HBM-traffic time, whichever floor is higher.
+        1.0 = the step runs exactly at its physics floor (e.g. decode at the
+        cache-read bandwidth bound); low values = the bound is inflated by
+        redundant compute or avoidable collectives."""
+        if self.bound_s <= 0:
+            return 0.0
+        useful = self.model_flops if self.model_flops > 0 else self.flops
+        useful_time = (useful / max(self.flops, 1e-30)) * self.compute_s
+        floor = max(useful_time, self.memory_s)
+        return min(1.0, floor / self.bound_s)
+
+    def to_dict(self) -> Dict[str, float | str | int]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound_s": self.bound_s,
+            "dominant": self.dominant,
+            "chips": self.chips,
+            "dtype": self.dtype,
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flop_fraction": self.useful_flop_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def three_term(
+    events: Events,
+    chip: hw.ChipSpec,
+    chips: int,
+    *,
+    dtype: str = "bf16",
+    model_flops: float = 0.0,
+) -> RooflineTerms:
+    peak = chip.peak(dtype)
+    compute_s = events.flops / (chips * peak) if peak else 0.0
+    memory_s = events.bytes_accessed / (chips * chip.hbm_bw)
+    ici = chip.ici_bw()
+    collective_s = events.collective_bytes / (chips * ici) if ici else 0.0
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        chips=chips,
+        dtype=dtype,
+        flops=events.flops,
+        hbm_bytes=events.bytes_accessed,
+        collective_bytes=events.collective_bytes,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_lm(
+    n_params: float, tokens: float, *, training: bool = True, n_active: float | None = None
+) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference forward.
+
+    For MoE pass ``n_active`` (activated params per token).
+    """
+    n = n_active if n_active is not None else n_params
+    factor = 6.0 if training else 2.0
+    return factor * n * tokens
+
+
+def model_flops_cell(cfg, shape) -> float:
+    """Architecture-aware MODEL_FLOPS for one (cfg, shape) cell.
+
+    Extends the 6·N·D / 2·N·D parameter term with the sequence-dependent
+    compute the parameter count cannot see — without it every long-context
+    attention cell reports a bogus "waste" factor:
+
+      * attention (per layer, per token, fwd): 4·S_eff·H·hd
+        (QKᵀ + PV; S_eff = S/2 causal train/prefill, S for cached decode)
+      * SSD/Mamba-2 (per layer, per token, fwd): 2·Q·nh·(N+P) intra-chunk
+        dual term + 4·nh·N·P state update/readout
+      * whisper encoder: non-causal attention on S_enc per encoder layer
+
+    Training multiplies the sequence terms by 3 (fwd + bwd), matching the
+    6N/2N convention.
+    """
+    from repro.configs.base import LayerKind
+
+    training = shape.kind == "train"
+    pass_factor = 3.0 if training else 1.0
+    n_active = cfg.active_param_count()
+    if shape.kind == "decode":
+        tokens = float(shape.global_batch)
+        s_eff = float(shape.seq_len)  # full cache read per new token
+    else:
+        tokens = float(shape.tokens)
+        s_eff = shape.seq_len / 2.0  # causal average context
+
+    total = model_flops_lm(
+        cfg.param_count(), tokens, training=training, n_active=n_active
+    )
+
+    # per-layer sequence terms
+    attn_unit = 4.0 * s_eff * cfg.n_heads * cfg.head_dim
+    if cfg.mla is not None:
+        ml = cfg.mla
+        attn_unit = 2.0 * s_eff * cfg.n_heads * (
+            ml.qk_nope_dim + ml.qk_rope_dim + ml.v_head_dim
+        )
+    ssd_unit = 0.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        nh = s.n_heads(cfg.d_model)
+        Q = min(s.chunk, shape.seq_len)
+        if shape.kind == "decode":
+            ssd_unit = 4.0 * nh * s.d_state * s.head_dim  # O(1) recurrence
+        else:
+            ssd_unit = (2.0 * (Q / 2.0) * nh * (s.d_state + s.head_dim)
+                        + 4.0 * nh * s.d_state * s.head_dim)
+
+    pattern = cfg._full_pattern()
+    n_attn = sum(1 for k in pattern if k == LayerKind.ATTN)
+    n_mamba = sum(1 for k in pattern if k == LayerKind.MAMBA)
+    total += pass_factor * tokens * (n_attn * attn_unit + n_mamba * ssd_unit)
+
+    if cfg.is_encoder_decoder:
+        s_enc = max(shape.seq_len // 4, 8)
+        cross = 4.0 * s_enc * cfg.n_heads * cfg.head_dim
+        n_dec = cfg.n_layers - cfg.enc_layers
+        total += pass_factor * tokens * n_dec * cross
+        if shape.kind != "decode":  # encoder runs only in train/prefill
+            enc_tokens = float(shape.global_batch) * s_enc
+            enc_attn = 4.0 * s_enc * cfg.n_heads * cfg.head_dim  # non-causal
+            total += pass_factor * enc_tokens * cfg.enc_layers * enc_attn
+    return float(total)

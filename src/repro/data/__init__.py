@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, global_batch, host_slice_for  # noqa: F401

@@ -1,0 +1,106 @@
+"""Trace-time mesh plan: how model code should lay activations onto the mesh.
+
+Model modules (transformer, moe) are mesh-agnostic; distribution-aware
+launchers (cells.py, train.py) activate a ``MeshPlan`` around tracing, and
+the modules read it to place sharding constraints (sequence parallelism,
+hierarchical MoE dispatch).  The default plan is a no-op, so tests and
+single-device runs never touch jax sharding machinery.
+
+Optimization flags ride on the plan so the PAPER-FAITHFUL baseline
+(`dryrun --baseline`) traces the plain path and the optimized variant the
+constrained one — both recorded separately in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    n_data: int = 1                      # product of data-parallel axis sizes
+    n_model: int = 1
+    data_axes: Tuple[str, ...] = ()      # ("pod", "data") on the multi-pod mesh
+    model_axis: Optional[str] = None
+    seq_parallel: bool = False           # Megatron-SP residual constraints
+    moe_impl: str = "global"             # global | hierarchical | shard_map
+    mesh: Optional[object] = dataclasses.field(default=None, compare=False)
+
+    @property
+    def moe_hierarchical(self) -> bool:
+        return self.moe_impl == "hierarchical"
+
+    @property
+    def dp(self):
+        """The data axes as a PartitionSpec entry."""
+        if not self.data_axes:
+            return None
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def active(self) -> bool:
+        return bool(self.data_axes) or self.model_axis is not None
+
+
+_PLAN: contextvars.ContextVar[MeshPlan] = contextvars.ContextVar(
+    "repro_mesh_plan", default=MeshPlan()
+)
+
+
+def current() -> MeshPlan:
+    return _PLAN.get()
+
+
+@contextlib.contextmanager
+def use_plan(plan: MeshPlan):
+    token = _PLAN.set(plan)
+    try:
+        yield plan
+    finally:
+        _PLAN.reset(token)
+
+
+def plan_for_mesh(mesh, *, seq_parallel: bool = False,
+                  moe_impl: str = "global") -> MeshPlan:
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    n_model = mesh.shape["model"] if "model" in names else 1
+    return MeshPlan(
+        n_data=n_data,
+        n_model=n_model,
+        data_axes=data_axes,
+        model_axis="model" if "model" in names else None,
+        seq_parallel=seq_parallel,
+        moe_impl=moe_impl,
+        mesh=mesh,
+    )
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op when no mesh is
+    active (unit tests, single-device runs)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def shard_seq(x: jax.Array, plan: MeshPlan) -> jax.Array:
+    """Residual-stream constraint for sequence parallelism: (B, S, d) with
+    batch over the data axes and SEQUENCE over the model axis.  GSPMD then
+    lowers each block's output projection to reduce-scatter(+all-gather on
+    entry) instead of a full all-reduce — half the TP collective volume."""
+    if not (plan.seq_parallel and plan.model_axis):
+        return x
+    if x.ndim != 3 or x.shape[1] % plan.n_model != 0:
+        return x
+    return constrain(x, P(plan.dp, plan.model_axis, None))

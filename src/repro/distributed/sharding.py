@@ -1,0 +1,237 @@
+"""Divisibility-aware sharding rules: param pytrees -> NamedSharding pytrees.
+
+Megatron-style tensor parallelism over the ``model`` axis:
+  * embeddings / lm_head: vocab over ``model``
+  * attention q/k/v projections: output (head) dim over ``model``
+  * attention output proj / FFN down proj: input dim over ``model``  (row)
+  * FFN up/gate: output dim over ``model``  (column)
+  * MoE expert stacks (E, d, f): expert dim over ``model``  (EP)
+  * Mamba z/x/dt projections + conv + out_proj: d_inner over ``model``
+  * everything else (norms, scalars, routers, B/C projections): replicated
+
+A dim is sharded on an axis only if divisible; otherwise the rule falls back
+to the next candidate dim or replication (e.g. whisper's 20-head projections
+keep the fused output dim sharded because 20*64=1280 divides 16 even though
+20 heads alone would not).
+
+Batch ("data"-parallel) sharding of activations uses all of (pod, data);
+ZeRO-style optimizer-state sharding adds those axes to the first divisible
+replicated dim of each state tensor.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, data_axes
+
+# (path-regex, candidate specs tried in order; first fully-divisible wins).
+# Specs name logical roles; `model` is the TP axis.  Regexes match the
+# "/"-joined param path, e.g. "blocks/slot0/attn/wq/w".
+_RULES = [
+    # attention / mla / dense projections  — column-parallel
+    (r"(wq|wk|wv|w_uk|w_uv|wz|wx|wdt|lm_head)/w$", [P(None, "model"), P(None, None)]),
+    (r"(wq|wk|wv|wz|wx|wdt)/b$", [P("model"), P(None)]),
+    # row-parallel (contracting dim sharded)
+    (r"(wo|out_proj)/w$", [P("model", None), P(None, None)]),
+    (r"(wo|out_proj)/b$", [P(None)]),
+    # embeddings: vocab over model
+    (r"embed(ding)?s?/embedding$", [P("model", None), P(None, None)]),
+    # MoE expert stacks (E, d, f) / (E, f, d): expert-parallel
+    (r"moe/(wi_gate|wi_up|wo)$", [P("model", None, None), P(None, None, None)]),
+    (r"moe/router$", [P(None, None)]),
+    # dense / shared-expert SwiGLU FFN (raw arrays, not {w,b} dicts)
+    (r"(ffn|shared)/(wi_gate|wi_up)$", [P(None, "model"), P(None, None)]),
+    (r"(ffn|shared)/wo$", [P("model", None), P(None, None)]),
+    # mamba conv + small projections
+    (r"conv_x_[wb]$", [P(None, "model"), P(None)]),
+    (r"conv_BC_[wb]$", [P(None, None), P(None)]),
+    (r"wBC/w$", [P(None, None)]),
+    (r"wBC/b$", [P(None)]),
+    (r"(A_log|D|dt_bias)$", [P(None)]),
+    # kv-down (MLA) small projection
+    (r"w_dkv/w$", [P(None, None)]),
+    # norms and leftovers: replicate
+    (r".*", [P(None)]),
+]
+
+
+def _fits(spec: P, shape, mesh: Mesh) -> bool:
+    if len(spec) > len(shape):
+        return False
+    for dim, axes in zip(shape[-len(spec):] if spec else (), spec):
+        if axes is None:
+            continue
+        names = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for n in names:
+            if n not in mesh.axis_names:
+                return False
+            size *= axis_size(mesh, n)
+        if dim % size != 0:
+            return False
+    return True
+
+
+def _pad_spec(spec: P, rank: int) -> P:
+    """Left-pad with None for stacked leading axes (scan-over-layers)."""
+    pad = rank - len(spec)
+    return P(*([None] * pad + list(spec)))
+
+
+def spec_for_path(path: str, shape, mesh: Mesh) -> P:
+    for pattern, candidates in _RULES:
+        if re.search(pattern, path):
+            for cand in candidates:
+                if _fits(cand, shape, mesh):
+                    return _pad_spec(cand, len(shape))
+            return P(*([None] * len(shape)))
+    return P(*([None] * len(shape)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params: Any, mesh: Mesh):
+    """NamedSharding pytree for a model param pytree."""
+
+    def f(path, leaf):
+        spec = spec_for_path(_path_str(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# --------------------------------------------------------------------------
+# activations / inputs
+# --------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch: int, rank: int, *, seq_axis: Optional[int] = None,
+               seq_len: int = 0) -> P:
+    """Shard dim0 (batch) over the data axes; if batch is too small, fall
+    back to sharding the sequence dim (long-context decode, batch=1)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    dims = [None] * rank
+    if batch % dp_size == 0:
+        dims[0] = dp if len(dp) > 1 else dp[0]
+    elif seq_axis is not None and seq_len % dp_size == 0:
+        dims[seq_axis] = dp if len(dp) > 1 else dp[0]
+    return P(*dims)
+
+
+def input_shardings(specs: Any, mesh: Mesh, *, batch: int):
+    """Shardings for the input_specs pytree (tokens, labels, stubs, caches).
+
+    Caches: batch dim is index 1 (stacked layers lead); when batch doesn't
+    divide the data axes (long_500k, B=1), the sequence dim shards instead,
+    and SSM states shard their head dim over ``model``.
+    """
+
+    def f(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        if "cache" in pstr or "ssm_state" in pstr or "conv_state" in pstr or (
+            len(shape) >= 4
+        ):
+            return NamedSharding(mesh, _cache_spec(pstr, shape, mesh, batch))
+        # flat inputs: tokens/labels (B, S), stubs (B, S, d)
+        return NamedSharding(mesh, batch_spec(mesh, batch, len(shape)))
+
+    return jax.tree_util.tree_map_with_path(f, specs)
+
+
+def _cache_spec(pstr: str, shape, mesh: Mesh, batch: int) -> P:
+    dp = data_axes(mesh)
+    dp_axes = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    m = axis_size(mesh, "model")
+    dims = [None] * len(shape)
+    if len(shape) == 0 or "pos" in pstr:
+        return P()
+    # identify batch axis: stacked caches are (nsb, B, ...), whisper too;
+    # non-stacked (first_block) are (B, ...)
+    b_axis = 1 if (len(shape) >= 2 and shape[0] != batch and shape[1] == batch) else 0
+    if batch % dp_size == 0 and shape[b_axis] == batch:
+        dims[b_axis] = dp_axes
+        if "ssm_state" in pstr or "conv_state" in pstr:
+            # shard heads (ssm) / channels (conv) over model when divisible
+            ax = b_axis + 1 if "ssm_state" in pstr else len(shape) - 1
+            if shape[ax] % m == 0:
+                dims[ax] = "model"
+            return P(*dims)
+        # attention caches (.., B, S, ...): ALSO shard the long seq dim over
+        # `model` — a 549 GB 32k-prefill cache must spread over all chips.
+        seq_axis = b_axis + 1
+        if len(shape) > seq_axis + 1 and shape[seq_axis] % m == 0:
+            dims[seq_axis] = "model"
+        return P(*dims)
+    # batch too small (long_500k, B=1): shard heads/channels over model for
+    # SSM state; shard the seq dim over (data x model) for attention caches
+    if "ssm_state" in pstr:
+        if shape[b_axis + 1] % m == 0:
+            dims[b_axis + 1] = "model"
+        return P(*dims)
+    if "conv_state" in pstr:
+        if shape[-1] % m == 0:
+            dims[-1] = "model"
+        return P(*dims)
+    seq_axis = b_axis + 1
+    if len(shape) > seq_axis:
+        full = tuple(dp) + ("model",)
+        if shape[seq_axis] % (dp_size * m) == 0:
+            dims[seq_axis] = full
+        elif shape[seq_axis] % dp_size == 0:
+            dims[seq_axis] = dp_axes
+    return P(*dims)
+
+
+# --------------------------------------------------------------------------
+# ZeRO optimizer-state sharding
+# --------------------------------------------------------------------------
+
+
+def zero_shard_spec(param_spec: P, shape, mesh: Mesh) -> P:
+    """Add the data axes to the first unsharded, divisible dim (ZeRO-1/3)."""
+    dp = data_axes(mesh)
+    if not dp:
+        return param_spec
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    dims = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    for i, (d, s) in enumerate(zip(shape, dims)):
+        if s is None and d % dp_size == 0 and d > 0:
+            dims[i] = dp if len(dp) > 1 else dp[0]
+            return P(*dims)
+    return P(*dims)
+
+
+def opt_state_shardings(params, p_shardings, mesh: Mesh, *, zero: bool = True):
+    """Shardings for AdamW state (m, v, master) mirroring param shapes."""
+
+    def f(p_leaf, s_leaf):
+        if not zero:
+            return s_leaf
+        spec = zero_shard_spec(s_leaf.spec, p_leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(f, params, p_shardings)

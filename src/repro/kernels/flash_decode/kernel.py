@@ -1,0 +1,106 @@
+"""Flash-decode: one-token attention over a long KV cache, KV-blocked.
+
+The serve-side hot loop of every decode_* cell: q (B, H, D) attends to a
+(B, S, KV, D) cache of which only ``valid_len`` positions are live.  The
+kernel streams KV blocks through VMEM keeping a running (max, sum, acc) —
+online softmax — and PREDICATES each block on ``pos < valid_len``: ragged
+context lengths occupy only ceil(valid/bs) block-issues per head instead of
+S/bs, the SVE predication insight applied at the token level (a fixed-width
+schedule must process the whole padded cache).
+
+Grid: (B, KV-heads, S/bs) with the KV axis innermost (sequential).  GQA via
+G query heads per KV head processed together — the q tile is (G, D), MXU
+contractions are (G, D) x (D, bs).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, vl_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, bs: int, ns: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = vl_ref[0]
+    q = q_ref[0, 0]  # (G, D)
+    k = k_ref[0, 0]  # (bs, D)
+    v = v_ref[0, 0]
+    D = q.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    pred = pos < valid  # predicate register analogue
+
+    # skip fully-masked blocks entirely (ragged-length win; on TPU this is
+    # the "don't issue the tile" branch)
+    @pl.when(si * bs < valid)
+    def _work():
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+        s = jnp.where(pred[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_ref[...], s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,       # (B, KV, G, D)
+    k: jax.Array,       # (B, S, KV, D)
+    v: jax.Array,       # (B, S, KV, D)
+    valid_len: jax.Array,  # (B,) int32 — live cache length per sequence
+    *,
+    block_s: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (B, KV, G, D) attention output over the predicated cache."""
+    B, KV, G, D = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    kernel = functools.partial(_decode_kernel, bs=bs, ns=ns)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kt = k.transpose(0, 2, 1, 3)  # (B, KV, S, D): head-major streaming
+    vt = v.transpose(0, 2, 1, 3)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kt, vt, valid_len)

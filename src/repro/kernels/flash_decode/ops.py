@@ -1,0 +1,14 @@
+"""Jit wrapper for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_decode.kernel import flash_decode as _fd
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k, v, valid_len, *, block_s: int = 512, interpret: bool = True):
+    return _fd(q, k, v, valid_len, block_s=block_s, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Oracle + analytic terms for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, valid_len):
+    """q (B,KV,G,D); k/v (B,S,KV,D); valid_len (B,) -> (B,KV,G,D)."""
+    B, KV, G, D = q.shape
+    S = k.shape[1]
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    mask = jnp.arange(S)[None, :] < valid_len[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flops_bytes(B, KV, G, D, valid_len, dtype_bytes: int = 2) -> dict:
+    """Per decode step: 2*2*H*D flops per live cache token; traffic = live
+    K+V reads (the q/output traffic is negligible)."""
+    live = float(sum(int(v) for v in valid_len))
+    flops = 4.0 * KV * G * D * live
+    bytes_ = 2.0 * KV * D * dtype_bytes * live
+    return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_ if bytes_ else 0}
+
+
+def issue_counts(valid_len, S: int, block_s: int) -> dict:
+    """Predicated vs fixed-width block issues (the SVE lesson at token level)."""
+    import math as m
+
+    pred = sum(m.ceil(max(int(v), 1) / block_s) for v in valid_len)
+    fixed = len(valid_len) * (S // block_s)
+    return {"predicated": pred, "fixed": fixed,
+            "r_issue": fixed / pred if pred else 0.0}

@@ -1,0 +1,73 @@
+"""MXU-tiled GEMM — the paper's DGEMM/SGEMM on TPU.
+
+Classic Pallas TPU matmul schedule: grid (M/bm, N/bn, K/bk) with the K axis
+innermost ("arbitrary" = sequential), accumulating into an fp32 VMEM scratch
+tile; the output tile is written once on the last K step.  Block shapes are
+MXU-aligned (multiples of 128 on the matmul dims in production; tests sweep
+smaller aligned tiles).
+
+The paper's ELEN axis maps to the dtype sweep: fp32 ("double" stand-in on
+TPU — the MXU has no fp64), bf16 (native), and the accumulate-in-fp32 rule
+plays the role of SVE's widening arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (M, K) @ y: (K, N) -> (M, N); fp32 accumulation in VMEM scratch."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2, (x.shape, y.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (
+        f"({M},{N},{K}) not divisible by tile ({bm},{bn},{bk})"
+    )
+    nk = K // bk
+    kernel = functools.partial(_gemm_kernel, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[_vmem_scratch(bm, bn)],
+        interpret=interpret,
+    )(x, y)
+
+
+def _vmem_scratch(bm: int, bn: int):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((bm, bn), jnp.float32)

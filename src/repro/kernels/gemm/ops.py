@@ -1,0 +1,34 @@
+"""Jit wrapper + VMEM-footprint model for the GEMM kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gemm.kernel import gemm as _gemm
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gemm(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = True):
+    return _gemm(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, in_bytes: int = 2) -> int:
+    """Working set per grid step: x tile + y tile + fp32 acc + out tile."""
+    return bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4 + bm * bn * in_bytes
+
+
+def pick_tiles(M: int, N: int, K: int, *, vmem_budget: int = 96 * 2**20,
+               in_bytes: int = 2) -> tuple:
+    """Largest MXU-aligned (multiple-of-128) tiles fitting the VMEM budget."""
+    best = (128, 128, 128)
+    for bm in (512, 256, 128):
+        for bn in (512, 256, 128):
+            for bk in (1024, 512, 256, 128):
+                if M % bm or N % bn or K % bk:
+                    continue
+                if vmem_bytes(bm, bn, bk, in_bytes) <= vmem_budget:
+                    if bm * bn * bk > best[0] * best[1] * best[2]:
+                        best = (bm, bn, bk)
+    return best

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle + analytic roofline terms for the GEMM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flops_bytes(M: int, N: int, K: int, dtype_bytes: int = 4) -> dict:
+    """Analytic kernel cost: 2MNK FLOPs; cold traffic A+B+C."""
+    flops = 2.0 * M * N * K
+    bytes_ = (M * K + K * N + M * N) * dtype_bytes
+    return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_}

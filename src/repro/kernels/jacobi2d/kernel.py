@@ -1,0 +1,59 @@
+"""Jacobi 2D 5-point stencil — the paper's memory-bound PDE sweep.
+
+TPU adaptation: the grid is tiled over row-blocks; each program writes one
+(br, W) output tile, reading its rows plus a one-row halo from the resident
+input (a production variant double-buffers halo DMAs; the BlockSpec'd output
+tiling and the shifted-adds vector body — no gather, pure VPU — are the
+structure that matters).  Roofline: AI = 4 flops / 12 bytes per point
+(fp32), firmly memory-bound (paper Fig. 7 / Table 3: Class 2 at 1 thread).
+
+Boundary semantics: Dirichlet — the outermost ring passes through unchanged,
+interior points get the 4-neighbour average.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _jacobi_kernel(u_ref, out_ref, *, br: int, H: int, W: int):
+    i = pl.program_id(0)
+    r0 = i * br  # first output row of this tile
+
+    mid = u_ref[pl.dslice(r0, br), :]
+
+    # north neighbours: rows r0-1 .. r0+br-2.  The start is clamped at the
+    # top edge; the clamped (r0 == 0) read is row-misaligned by one, fixed
+    # with a roll — the affected row 0 is a boundary row and masked anyway.
+    north = u_ref[pl.dslice(jnp.maximum(r0 - 1, 0), br), :]
+    north = jnp.where(r0 == 0, jnp.roll(north, 1, axis=0), north)
+
+    # south neighbours: rows r0+1 .. r0+br, clamped at the bottom edge.
+    south = u_ref[pl.dslice(jnp.minimum(r0 + 1, H - br), br), :]
+    south = jnp.where(r0 + br >= H, jnp.roll(south, -1, axis=0), south)
+
+    west = jnp.pad(mid, ((0, 0), (1, 0)))[:, :W]
+    east = jnp.pad(mid, ((0, 0), (0, 1)))[:, 1:]
+    avg = 0.25 * (north + south + west + east)
+
+    row = r0 + jax.lax.broadcasted_iota(jnp.int32, (br, W), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (br, W), 1)
+    interior = (row > 0) & (row < H - 1) & (col > 0) & (col < W - 1)
+    out_ref[...] = jnp.where(interior, avg.astype(out_ref.dtype), mid)
+
+
+def jacobi_step(u: jax.Array, *, block_rows: int = 128, interpret: bool = True):
+    """One Jacobi sweep over u (H, W)."""
+    H, W = u.shape
+    br = min(block_rows, H)
+    assert H % br == 0, (H, br)
+    return pl.pallas_call(
+        lambda u_ref, o_ref: _jacobi_kernel(u_ref, o_ref, br=br, H=H, W=W),
+        grid=(H // br,),
+        in_specs=[pl.BlockSpec((H, W), lambda i: (0, 0))],  # resident + halo
+        out_specs=pl.BlockSpec((br, W), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((H, W), u.dtype),
+        interpret=interpret,
+    )(u)

@@ -1,0 +1,23 @@
+"""Jit wrapper + multi-sweep driver for the Jacobi2D kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.jacobi2d.kernel import jacobi_step as _step
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def jacobi_step(u, *, block_rows: int = 128, interpret: bool = True):
+    return _step(u, block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sweeps", "block_rows", "interpret"))
+def jacobi(u, *, sweeps: int = 10, block_rows: int = 128, interpret: bool = True):
+    def body(u, _):
+        return _step(u, block_rows=block_rows, interpret=interpret), None
+
+    u, _ = jax.lax.scan(body, u, None, length=sweeps)
+    return u

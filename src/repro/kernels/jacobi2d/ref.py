@@ -1,0 +1,19 @@
+"""Oracle + analytic terms for the Jacobi2D stencil."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jacobi_ref(u):
+    """One sweep, Dirichlet boundary (edges pass through)."""
+    avg = 0.25 * (u[:-2, 1:-1] + u[2:, 1:-1] + u[1:-1, :-2] + u[1:-1, 2:])
+    return u.at[1:-1, 1:-1].set(avg.astype(u.dtype))
+
+
+def flops_bytes(H: int, W: int, dtype_bytes: int = 4) -> dict:
+    """Per sweep: 4 flops/point; traffic = read u + write out (cold)."""
+    n = float(H * W)
+    flops = 4.0 * n
+    bytes_ = 2.0 * n * dtype_bytes + n * dtype_bytes  # 5-pt reads ~cached: 3N words
+    return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_}

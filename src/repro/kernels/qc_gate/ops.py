@@ -1,0 +1,30 @@
+"""Jit wrapper + circuit driver for the RX-gate kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qc_gate.kernel import rx_gate as _rx
+
+
+@functools.partial(jax.jit, static_argnames=("qubit", "theta", "block_outer", "interpret"))
+def rx_gate(re, im, *, qubit: int, theta: float, block_outer: int = 256,
+            interpret: bool = True):
+    return _rx(re, im, qubit, theta, block_outer=block_outer, interpret=interpret)
+
+
+def rx_layer(re, im, n_qubits: int, theta: float, *, interpret: bool = True):
+    """The paper's benchmark: one RX on every qubit (21-qubit problem)."""
+    for q in range(n_qubits):
+        re, im = rx_gate(re, im, qubit=q, theta=theta, interpret=interpret)
+    return re, im
+
+
+def zero_state(n_qubits: int):
+    n_amp = 1 << n_qubits
+    re = jnp.zeros((n_amp,), jnp.float32).at[0].set(1.0)
+    im = jnp.zeros((n_amp,), jnp.float32)
+    return re, im

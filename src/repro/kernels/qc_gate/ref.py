@@ -1,0 +1,26 @@
+"""Oracle for the RX-gate kernel: dense complex matrix semantics."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rx_ref(re, im, qubit: int, theta: float):
+    """Complex-arithmetic reference on the host (numpy complex128)."""
+    psi = np.asarray(re, np.float64) + 1j * np.asarray(im, np.float64)
+    n_amp = psi.shape[0]
+    inner = 1 << qubit
+    psi = psi.reshape(n_amp // (2 * inner), 2, inner)
+    c, s = np.cos(theta / 2), np.sin(theta / 2)
+    a, b = psi[:, 0], psi[:, 1]
+    out = np.stack([c * a - 1j * s * b, c * b - 1j * s * a], axis=1)
+    out = out.reshape(n_amp)
+    return out.real.astype(np.float32), out.imag.astype(np.float32)
+
+
+def flops_bytes(n_qubits: int, dtype_bytes: int = 4) -> dict:
+    """Per gate: 6 real flops per amplitude; read+write both planes."""
+    n_amp = float(1 << n_qubits)
+    flops = 6.0 * n_amp
+    bytes_ = 4.0 * n_amp * dtype_bytes  # re/im read + write
+    return {"flops": flops, "bytes": bytes_, "ai": flops / bytes_}

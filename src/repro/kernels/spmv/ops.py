@@ -1,0 +1,55 @@
+"""Jit wrappers + the issue-count model for the SpMV kernels.
+
+``issue_counts`` is the INST_RETIRED analogue: how many (8x128) vector tile
+issues each variant needs.  Predicated (SVE/VLA-style) SpMV issues
+ceil(nnz/lane) per row; fixed-width issues ceil(width/lane) always — their
+ratio is the paper's Fig. 3a SpMV result (1.99x vs 1.0x).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import numpy as np
+
+from repro.kernels.spmv.kernel import spmv_blockell, spmv_fixed_width
+
+
+@functools.partial(jax.jit, static_argnames=("repeat", "interpret"))
+def spmv(values, col_idx, row_nnz, x, *, repeat: int = 1, interpret: bool = True):
+    return spmv_blockell(values, col_idx, row_nnz, x, repeat=repeat,
+                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_padded(values, col_idx, row_nnz, x, *, interpret: bool = True):
+    return spmv_fixed_width(values, col_idx, row_nnz, x, interpret=interpret)
+
+
+def issue_counts(row_nnz, width: int, lane: int = 128) -> dict:
+    """Vector-issue counts (INST_RETIRED analogue) for the two variants."""
+    nnz = np.asarray(row_nnz)
+    predicated = int(np.ceil(np.maximum(nnz, 1) / lane).sum())
+    fixed = int(nnz.size * math.ceil(width / lane))
+    scalar = int(np.maximum(nnz, 1).sum())  # 1 element / instruction
+    return {
+        "scalar": scalar,
+        "predicated": predicated,
+        "fixed_width": fixed,
+        "r_ins_predicated": scalar / predicated,
+        "r_ins_fixed": scalar / fixed,
+    }
+
+
+def flops_bytes(row_nnz, repeat: int = 1, dtype_bytes: int = 4) -> dict:
+    """Analytic roofline terms for the synthetic benchmark (paper Sec. 3.2):
+    per nonzero: 2*repeat FLOPs; traffic: val + colidx + gathered x."""
+    nnz = float(np.asarray(row_nnz).sum())
+    return {
+        "flops": 2.0 * repeat * nnz,
+        "bytes": nnz * (dtype_bytes + 4 + dtype_bytes),
+        "gather_bytes": nnz * dtype_bytes,
+        "ai": 2.0 * repeat * nnz / (nnz * (dtype_bytes + 4 + dtype_bytes)),
+    }

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for block-ELL SpMV (+ the paper's repeat-K synthetic)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_from_blockell(values, col_idx, row_nnz, n_cols: int):
+    """Reconstruct the dense matrix (host-side, tests only)."""
+    nb, rb, width = values.shape
+    n_rows = nb * rb
+    a = np.zeros((n_rows, n_cols), dtype=np.float64)
+    v = np.asarray(values, np.float64)
+    c = np.asarray(col_idx)
+    nz = np.asarray(row_nnz)
+    for b in range(nb):
+        for r in range(rb):
+            for j in range(int(nz[b, r])):
+                a[b * rb + r, c[b, r, j]] += v[b, r, j]
+    return a
+
+
+def spmv_ref(values, col_idx, row_nnz, x, *, repeat: int = 1):
+    """y[i] = sum_j val[i,j] * x[col[i,j]] over the first row_nnz[i] entries.
+
+    ``repeat`` mimics the paper's synthetic benchmark: the FMA work is done
+    ``repeat`` times (each contributing 1/repeat) — same result, repeat x
+    the arithmetic intensity.
+    """
+    nb, rb, width = values.shape
+    lane = jnp.arange(width)[None, None, :]
+    mask = lane < row_nnz[:, :, None]
+    gathered = x[col_idx] * values  # (nb, rb, width)
+    contrib = jnp.where(mask, gathered, 0.0)
+    y = jnp.zeros((nb, rb), values.dtype)
+    for _ in range(repeat):
+        y = y + contrib.sum(axis=-1) / repeat
+    return y.reshape(nb * rb)
+
+
+def make_problem(key, n_rows: int, n_cols: int, *, row_block: int = 8,
+                 max_nnz: int = 64, width_pad: int = 128, dtype=jnp.float32,
+                 zipf_a: float = 1.3):
+    """Random ragged sparse matrix in block-ELL layout (Zipf row lengths —
+    the irregularity that defeats fixed-width SIMD in the paper)."""
+    import jax
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    nb = -(-n_rows // row_block)
+    width = -(-max_nnz // width_pad) * width_pad
+    # Zipf-ish ragged row lengths in [1, max_nnz]
+    u = jax.random.uniform(k1, (nb, row_block))
+    row_nnz = (1 + (max_nnz - 1) * u ** zipf_a).astype(jnp.int32)
+    col_idx = jax.random.randint(k2, (nb, row_block, width), 0, n_cols)
+    values = jax.random.normal(k3, (nb, row_block, width), dtype)
+    lane = jnp.arange(width)[None, None, :]
+    values = jnp.where(lane < row_nnz[:, :, None], values, 0.0)
+    return values, col_idx, row_nnz

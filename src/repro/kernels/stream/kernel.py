@@ -1,0 +1,64 @@
+"""STREAM (copy/scale/add/triad) as Pallas kernels — the paper's bandwidth
+probe.  Pure streaming: one VMEM tile in, one out, zero reuse; the roofline
+memory term IS the runtime, so the kernel's only job is to keep tiles
+hardware-aligned ((8, 128) sublane x lane multiples) and let the DMA pipeline
+run.  The ELEN sweep (fp32/bf16/fp16) reproduces the paper's Sec. 4.2 STREAM
+experiment: instruction count drops with element size, runtime does not.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _scale_kernel(a_ref, c_ref, *, q):
+    c_ref[...] = a_ref[...] * q
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(a_ref, b_ref, c_ref, *, q):
+    c_ref[...] = a_ref[...] + q * b_ref[...]
+
+
+def _call(kernel, arrays, *, block_rows: int, interpret: bool):
+    rows, width = arrays[0].shape
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, width), lambda i: (i, 0)) for _ in arrays],
+        out_specs=pl.BlockSpec((br, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), arrays[0].dtype),
+        interpret=interpret,
+    )(*arrays)
+
+
+def stream_copy(a, *, block_rows: int = 256, interpret: bool = True):
+    return _call(_copy_kernel, (a,), block_rows=block_rows, interpret=interpret)
+
+
+def stream_scale(a, q: float, *, block_rows: int = 256, interpret: bool = True):
+    # q is a compile-time scalar (embedded in the kernel), not an operand
+    k = functools.partial(_scale_kernel, q=float(q))
+    return _call(k, (a,), block_rows=block_rows, interpret=interpret)
+
+
+def stream_add(a, b, *, block_rows: int = 256, interpret: bool = True):
+    return _call(_add_kernel, (a, b), block_rows=block_rows, interpret=interpret)
+
+
+def stream_triad(a, b, q: float, *, block_rows: int = 256, interpret: bool = True):
+    k = functools.partial(_triad_kernel, q=float(q))
+    return _call(k, (a, b), block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,29 @@
+"""Jit wrappers for the STREAM kernels + the paper's ELEN instruction model."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+
+from repro.kernels.stream import kernel as _k
+
+copy = jax.jit(_k.stream_copy, static_argnames=("block_rows", "interpret"))
+scale = jax.jit(_k.stream_scale, static_argnums=(1,),
+                static_argnames=("block_rows", "interpret"))
+add = jax.jit(_k.stream_add, static_argnames=("block_rows", "interpret"))
+triad = jax.jit(_k.stream_triad, static_argnums=(2,),
+                static_argnames=("block_rows", "interpret"))
+
+
+def issue_counts(n_elements: int, elen_bits: int, vlen_bits: int = 128) -> dict:
+    """Paper Sec. 4.2: R_ins for STREAM tracks VB = VLEN/ELEN even though
+    wall time is bandwidth-bound and flat."""
+    lanes = vlen_bits // elen_bits
+    return {
+        "scalar": n_elements,
+        "vector": math.ceil(n_elements / lanes),
+        "r_ins": n_elements / math.ceil(n_elements / lanes),
+        "vb": lanes,
+    }

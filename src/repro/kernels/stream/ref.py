@@ -1,0 +1,30 @@
+"""Oracle + analytic terms for the STREAM kernels (McCalpin semantics)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def copy_ref(a):
+    return a + 0  # force a materialized copy
+
+
+def scale_ref(a, q):
+    return a * jnp.asarray(q, a.dtype)
+
+
+def add_ref(a, b):
+    return a + b
+
+
+def triad_ref(a, b, q):
+    return a + jnp.asarray(q, a.dtype) * b
+
+
+def flops_bytes(kind: str, n_elements: int, dtype_bytes: int) -> dict:
+    """McCalpin counting: copy/scale move 2N words, add/triad 3N."""
+    words = {"copy": 2, "scale": 2, "add": 3, "triad": 3}[kind]
+    flops = {"copy": 0, "scale": 1, "add": 1, "triad": 2}[kind] * n_elements
+    bytes_ = words * n_elements * dtype_bytes
+    return {"flops": float(flops), "bytes": float(bytes_),
+            "ai": flops / bytes_ if bytes_ else 0.0}

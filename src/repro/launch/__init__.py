@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` must only ever run as a standalone process —
+it sets XLA_FLAGS (512 host devices) at import.  Import ``mesh``/``cells``
+freely.
+"""

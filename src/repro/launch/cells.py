@@ -1,0 +1,328 @@
+"""Cell = (architecture x input shape x mesh): spec building, AOT lowering,
+and artifact analysis shared by the dry-run, the roofline table, and the
+perf-iteration harness.
+
+Nothing here allocates device memory: params/optimizer/cache stand-ins are
+ShapeDtypeStructs (built with ``jax.eval_shape``) carrying NamedShardings,
+and cells are only ``.lower()``-ed and ``.compile()``-d.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.core import counters as counters_mod
+from repro.core import hw
+from repro.core import roofline as roofline_mod
+from repro.distributed import context as mesh_ctx
+from repro.distributed import sharding as shard_rules
+from repro.optim import adamw
+from repro.train import steps as steps_mod
+
+
+def _with_plan(fn, plan):
+    """Activate the mesh plan during TRACING of fn (sharding constraints in
+    model code read it via contextvar)."""
+
+    def wrapped(*args, **kwargs):
+        with mesh_ctx.use_plan(plan):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+
+# Large archs that need reduced-precision optimizer state to fit HBM
+# (Gopher-style bf16 Adam moments; recorded in EXPERIMENTS.md).
+_BF16_STATE_ARCHS = {"jamba-1.5-large-398b"}
+
+
+def run_config_for(arch: str, shape: ShapeConfig, *, baseline: bool = False) -> steps_mod.RunConfig:
+    if shape.kind != "train":
+        return steps_mod.RunConfig(remat="none", zero=False)
+    opt = adamw.AdamWConfig()
+    if arch in _BF16_STATE_ARCHS:
+        opt = dataclasses.replace(opt, state_dtype="bfloat16", master_weights=False)
+    if baseline:
+        # paper-faithful baseline posture: full remat, no ZeRO
+        return steps_mod.RunConfig(remat="full", zero=False, opt=opt)
+    return steps_mod.RunConfig(remat="full", zero=True, opt=opt)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    run: steps_mod.RunConfig
+    fn: Callable
+    args: Tuple[Any, ...]  # ShapeDtypeStructs with shardings attached
+    donate: Tuple[int, ...]
+    model_flops: float
+    out_shardings: Any = None
+    dtype: str = "bf16"
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}@{self.shape.name}"
+
+
+def _output_shardings(cfg: ModelConfig, out_spec, mesh: Mesh, batch: int):
+    """Constrain step outputs: without this, GSPMD is free to replicate the
+    prefill cache / logits (observed: 119 GB/device on qwen3-32b prefill)."""
+    vp = cfg.vocab_padded
+
+    def f(path, leaf):
+        pstr = shard_rules._path_str(path)
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if shape[-1] == vp and len(shape) >= 2:
+            spec = shard_rules.batch_spec(mesh, batch, len(shape))
+            dims = list(spec) + [None] * (len(shape) - len(spec))
+            if shape[-1] % axis_size_model(mesh) == 0:
+                dims[-1] = "model"
+            return NamedSharding(mesh, P(*dims))
+        if len(shape) >= 3 or "cache" in pstr or "state" in pstr:
+            return NamedSharding(
+                mesh, shard_rules._cache_spec(pstr, shape, mesh, batch)
+            )
+        return NamedSharding(mesh, shard_rules.batch_spec(mesh, batch, len(shape)))
+
+    return jax.tree_util.tree_map_with_path(f, out_spec)
+
+
+def axis_size_model(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def _attach(spec_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        spec_tree,
+        shard_tree,
+    )
+
+
+def _opt_shardings(opt_spec, p_shardings, mesh: Mesh, *, zero: bool):
+    """Mirror param shardings onto m/v/master; ZeRO-extend over data axes."""
+
+    def build(sub):
+        def f(p_sh, leaf):
+            if not zero:
+                return p_sh
+            spec = shard_rules.zero_shard_spec(p_sh.spec, leaf.shape, mesh)
+            return NamedSharding(mesh, spec)
+
+        return jax.tree.map(f, p_shardings, sub)
+
+    out = {"step": NamedSharding(mesh, P())}
+    for k in ("m", "v", "master"):
+        if k in opt_spec:
+            out[k] = build(opt_spec[k])
+    return out
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh: Mesh,
+    *,
+    baseline: bool = False,
+    run_override: Optional[steps_mod.RunConfig] = None,
+) -> Cell:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if not configs.shape_applicable(cfg, shape):
+        raise ValueError(f"{arch} x {shape_name}: skipped (full-attention @ 500k)")
+    run = run_override or run_config_for(arch, shape, baseline=baseline)
+    # Beyond-paper distribution optimizations ride the optimized variant
+    # only.  Sequence parallelism is TRAIN-ONLY and non-MoE:
+    #  * MoE: the EP entry is batch-split; a seq-sharded residual costs an
+    #    all-gather per MoE layer (measured +0.27s, §Perf iter A3c);
+    #  * prefill: the chunked-attention scans interact badly with a
+    #    seq-sharded residual (measured 9-12x compute blowup on the 32k
+    #    prefill cells, §Perf iter C2 — refuted hypothesis, reverted);
+    #  * train: keeps the win — half TP volume AND model-sharded remat
+    #    residuals (qwen3-32b train 151->39 GB/device).
+    # (A residual-level SP-on-prefill exception for non-dividing head counts
+    # was tried and REFUTED: the constraint does not reach the flash-tile
+    # interior, so whisper-prefill's replicated attention is unchanged —
+    # EXPERIMENTS.md §Perf C3.  The real fix is a context-parallel attention
+    # schedule inside the kernel; recorded as the top un-taken lever.)
+    plan = mesh_ctx.plan_for_mesh(
+        mesh,
+        seq_parallel=(not baseline and shape.kind == "train"
+                      and cfg.moe is None),
+        moe_impl="global" if baseline else "shard_map",
+    )
+
+    key = jax.random.PRNGKey(0)
+    params_spec = jax.eval_shape(lambda: steps_mod.init_model(key, cfg))
+    p_shardings = shard_rules.param_shardings(params_spec, mesh)
+    params_in = _attach(params_spec, p_shardings)
+
+    in_specs = configs.input_specs(cfg, shape)
+    in_shardings = shard_rules.input_shardings(
+        in_specs, mesh, batch=shape.global_batch
+    )
+    inputs_in = _attach(in_specs, in_shardings)
+
+    n_active = cfg.active_param_count()
+
+    if shape.kind == "train":
+        opt_spec = jax.eval_shape(lambda p: adamw.init_opt_state(p, run.opt), params_spec)
+        o_shardings = _opt_shardings(opt_spec, p_shardings, mesh, zero=run.zero)
+        opt_in = _attach(opt_spec, o_shardings)
+        train_fn = _with_plan(steps_mod.make_train_step(cfg, run), plan)
+        fn = lambda p, o, b: train_fn(p, o, b)  # noqa: E731
+        model_flops = roofline_mod.model_flops_cell(cfg, shape)
+        metrics_spec = jax.eval_shape(fn, params_in, opt_in, inputs_in)[2]
+        out_sh = (p_shardings, o_shardings,
+                  jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_spec))
+        return Cell(arch, shape, cfg, run, fn, (params_in, opt_in, inputs_in),
+                    donate=(0, 1), model_flops=model_flops, out_shardings=out_sh)
+
+    if shape.kind == "prefill":
+        pf = _with_plan(steps_mod.make_prefill_step(cfg, run), plan)
+        fn = lambda p, b: pf(p, **b)  # noqa: E731
+        model_flops = roofline_mod.model_flops_cell(cfg, shape)
+        out_spec = jax.eval_shape(fn, params_in, inputs_in)
+        out_sh = _output_shardings(cfg, out_spec, mesh, shape.global_batch)
+        return Cell(arch, shape, cfg, run, fn, (params_in, inputs_in),
+                    donate=(), model_flops=model_flops, out_shardings=out_sh)
+
+    # decode
+    dec = _with_plan(steps_mod.make_decode_step(cfg, run), plan)
+    fn = lambda p, b: dec(p, **b)  # noqa: E731
+    model_flops = roofline_mod.model_flops_cell(cfg, shape)
+    out_spec = jax.eval_shape(fn, params_in, inputs_in)
+    out_sh = _output_shardings(cfg, out_spec, mesh, shape.global_batch)
+    return Cell(arch, shape, cfg, run, fn, (params_in, inputs_in),
+                donate=(1,), model_flops=model_flops, out_shardings=out_sh)
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    jitted = jax.jit(
+        cell.fn, donate_argnums=cell.donate, out_shardings=cell.out_shardings
+    )
+    with mesh:
+        lowered = jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _tree_bytes(tree) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            n = 1
+            for s in leaf.shape:
+                n *= int(s)
+            total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def analytic_hbm_bytes(cell: Cell) -> Dict[str, float]:
+    """GLOBAL HBM-traffic model for one step (TPU-target semantics).
+
+    The structural HLO traffic count is kept as a *diagnostic* (see
+    ``events.hlo_traffic_bytes``): the pure-jnp chunked attention/SSD paths
+    materialize per-tile intermediates that the production Pallas kernels
+    keep in VMEM, so raw HLO bytes overstate the target machine's HBM
+    traffic.  This model charges what MUST move on the TPU:
+
+      * weights     — read per pass (fwd + remat recompute + grad-weight
+                      pass for training), grads written+read, params written
+      * optimizer   — moments/master read+write (exact spec byte-sums)
+      * activations — residual-stream reads/writes per layer boundary
+      * caches      — decode reads the full KV/SSM cache every step;
+                      prefill writes it once
+      * logits      — fp32 logit write (+read in bwd) and embedding gathers
+    """
+    cfg, shape = cell.cfg, cell.shape
+    L, d = cfg.n_layers, cfg.d_model
+    pbytes = _tree_bytes(cell.args[0])
+    # MoE decode with tiny batches touches only the activated experts
+    if (cfg.moe is not None and shape.kind == "decode"
+            and shape.global_batch * cfg.moe.top_k < cfg.moe.n_routed):
+        pbytes *= cfg.active_param_count() / cfg.param_count()
+    T = shape.tokens if shape.kind != "decode" else shape.global_batch
+    act_unit = T * d * 2.0  # bf16 residual stream
+    logit_bytes = T * cfg.vocab_padded * 4.0
+    out: Dict[str, float] = {}
+    if shape.kind == "train":
+        opt_bytes = _tree_bytes(cell.args[1])
+        out["weights"] = 6.0 * pbytes  # 3 weight reads + grad w/r + param write
+        out["optimizer"] = 2.0 * opt_bytes
+        out["activations"] = 8.0 * L * act_unit
+        out["logits"] = 2.0 * logit_bytes + 4.0 * T * d * 2.0
+    elif shape.kind == "prefill":
+        out["weights"] = pbytes
+        out["activations"] = 4.0 * L * act_unit  # includes the cache write
+        out["logits"] = shape.global_batch * cfg.vocab_padded * 4.0
+    else:  # decode
+        cache_bytes = 0.0
+        if len(cell.args) > 1 and isinstance(cell.args[1], dict):
+            cache_bytes = _tree_bytes(cell.args[1].get("cache", {}))
+        out["weights"] = pbytes
+        out["cache_read"] = cache_bytes
+        out["activations"] = 8.0 * L * act_unit
+        out["logits"] = logit_bytes
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def analyze_cell(cell: Cell, mesh: Mesh, compiled, chip: hw.ChipSpec = hw.TPU_V5E):
+    """Events + three-term roofline for a compiled cell.
+
+    compute & collective terms: while-aware structural HLO model
+    (core.hlo_cost); memory term: analytic TPU-traffic model
+    (``analytic_hbm_bytes``), with the raw structural HLO traffic kept as a
+    diagnostic in events.
+    """
+    hlo_text = compiled.as_text()
+    chips = mesh.size
+    events = counters_mod.events_from_compiled(
+        compiled, hlo_text=hlo_text, n_devices=chips
+    )
+    analytic_mem = analytic_hbm_bytes(cell)
+    hlo_traffic = events.bytes_accessed
+    events.hlo_traffic_bytes = hlo_traffic
+    events.bytes_accessed = analytic_mem["total"]
+    events.hbm_read_bytes = analytic_mem["total"] * 0.6
+    terms = roofline_mod.three_term(
+        events, chip, chips, dtype=cell.dtype, model_flops=cell.model_flops
+    )
+    mem = compiled.memory_analysis()
+    return {
+        "cell": cell.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+        "events": events.to_dict(),
+        "roofline": terms.to_dict(),
+        "analytic_memory": analytic_mem,
+        "hlo_traffic_bytes": hlo_traffic,
+        "memory_per_device": {
+            "argument_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": float(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "total_gb": (
+                float(getattr(mem, "argument_size_in_bytes", 0))
+                + float(getattr(mem, "output_size_in_bytes", 0))
+                + float(getattr(mem, "temp_size_in_bytes", 0))
+            ) / 1e9,
+            "fits_16gb_hbm": (
+                float(getattr(mem, "argument_size_in_bytes", 0))
+                + float(getattr(mem, "output_size_in_bytes", 0))
+                + float(getattr(mem, "temp_size_in_bytes", 0))
+            ) < 16e9,
+        },
+    }

@@ -1,0 +1,3 @@
+"""Model substrate: every assigned architecture, pure-functional JAX."""
+
+from repro.models import attention, layers, mla, moe, ssm, transformer, whisper  # noqa: F401

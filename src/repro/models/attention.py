@@ -1,0 +1,137 @@
+"""Grouped-query attention with RoPE, qk-norm, bias; train/prefill + decode.
+
+Prefill/train uses a chunked online-softmax ("flash"-style) pure-jnp path so
+that 32k-token sequences never materialize (S x S) score tensors — the scan
+tiles are what a Pallas splash-attention kernel would stream through VMEM on
+real hardware.  Decode is a single-token read over a fixed-size KV cache
+(written in place via dynamic_update_slice).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, h * hd, dtype, bias=cfg.qkv_bias),
+        "wk": layers.dense_init(ks[1], d, kv * hd, dtype, bias=cfg.qkv_bias),
+        "wv": layers.dense_init(ks[2], d, kv * hd, dtype, bias=cfg.qkv_bias),
+        "wo": layers.dense_init(ks[3], h * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.rms_norm_init(hd, dtype)
+        p["k_norm"] = layers.rms_norm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = layers.dense(params["wq"], x).reshape(B, S, h, hd)
+    k = layers.dense(params["wk"], x).reshape(B, S, kv, hd)
+    v = layers.dense(params["wv"], x).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(params["q_norm"], q, cfg.norm_eps)
+        k = layers.rms_norm(params["k_norm"], k, cfg.norm_eps)
+    cos, sin = layers.rope_cos_sin(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+from repro.models.flash import flash_attention  # noqa: E402  (shared kernel)
+
+
+def attention_full(params, cfg, x, positions, *, causal: bool = True,
+                   kv_override=None) -> jax.Array:
+    """Training / prefill attention.  kv_override=(k,v) enables cross-attn."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    q = q.reshape(B, S, kv, g, hd)
+    out = flash_attention(q, k, v, causal=causal)
+    out = out.transpose(0, 1, 2, 3, 4).reshape(B, S, h * hd)
+    return layers.dense(params["wo"], out)
+
+
+def attention_full_with_cache(params, cfg, x, positions):
+    """Prefill: full attention that also returns the populated KV cache."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = flash_attention(q.reshape(B, S, kv, g, hd), k, v, causal=True)
+    out = out.reshape(B, S, h * hd)
+    return layers.dense(params["wo"], out), {"k": k, "v": v}
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype, layers_stacked: int = 1):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (layers_stacked, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(params, cfg, x, cache_k, cache_v, pos):
+    """One-token decode step — READ-ONLY on the cache.
+
+    x: (B, 1, d); cache_k/v: (B, S, KV, D); pos: scalar int32 — current
+    length.  Returns (y, k_new, v_new): the (B, 1, KV, D) slices for the
+    new token.  The caller commits all layers' slices with ONE
+    dynamic_update_slice on the stacked cache (a per-layer in-scan
+    read-modify-write would materialize an unaliased full-cache copy per
+    layer on backends without scan buffer donation).
+    """
+    B, _, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    S = cache_k.shape[1]
+    q = q.reshape(B, 1, kv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s_old = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    mask = jnp.arange(S)[None, :] < pos  # strictly-older tokens from cache
+    s_old = jnp.where(mask[None, None, None, :, :], s_old, NEG_INF)
+    s_new = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k_new, preferred_element_type=jnp.float32
+    ) * scale  # (B,KV,G,1,1): self-attention of the incoming token
+
+    # Two-way online-softmax merge of {cache part, new token} — NOT a
+    # concatenate: the cache's seq axis is sharded over `model` at 32k+
+    # contexts, and a concat along a sharded axis makes GSPMD all-gather
+    # the whole KV cache per layer (measured 0.49 TB/step on
+    # qwen3-1.7b@decode_32k).  The merge only reduces over the sharded
+    # axis, which lowers to tiny all-reduces of (B,KV,G,1) stats.
+    m_old = s_old.max(axis=-1)                      # (B,KV,G,1)
+    p_old = jnp.exp(s_old - m_old[..., None])
+    l_old = p_old.sum(axis=-1)
+    ctx_old = jnp.einsum(
+        "bkgqs,bskd->bkgqd", p_old.astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )  # unnormalized context from the cache
+    s_new1 = s_new[..., 0]                          # (B,KV,G,1)
+    m = jnp.maximum(m_old, s_new1)
+    w_old = jnp.exp(m_old - m)                      # 0 when cache empty
+    w_new = jnp.exp(s_new1 - m)
+    denom = l_old * w_old + w_new
+    v_new5 = v_new.astype(jnp.float32).transpose(0, 2, 1, 3)[:, :, None, :, :]
+    out = (ctx_old * w_old[..., None] + v_new5 * w_new[..., None]) / denom[..., None]
+    out = out.astype(x.dtype).reshape(B, 1, h * hd)
+    return layers.dense(params["wo"], out), k_new, v_new

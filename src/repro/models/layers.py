@@ -1,0 +1,142 @@
+"""Shared neural-net layers: norms, rotary embeddings, SwiGLU FFN, initializers.
+
+Pure-functional: ``init_*`` builds a param pytree; ``apply``-style functions
+take (params, inputs).  Norm math runs in fp32 regardless of compute dtype
+(standard mixed-precision practice; matches MaxText/T5X).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale: float, dtype) -> jax.Array:
+    # fan-in scaled init; fp32 draw then cast
+    stddev = scale / max(1.0, (shape[-2] if len(shape) >= 2 else shape[-1]) ** 0.5)
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev
+    return x.astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False):
+    kw, kb = jax.random.split(key)
+    p = {"w": truncated_normal(kw, (d_in, d_out), 1.0, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# --- norms -------------------------------------------------------------------
+
+
+def rms_norm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if params is not None and "scale" in params:
+        y = y * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layer_norm_init(d: int, dtype, *, parametric: bool = True):
+    if not parametric:
+        return {}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm; with empty params this is OLMo's non-parametric LN."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if params and "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def make_norm(cfg):
+    """Returns (init_fn(dtype)->params, apply_fn(params,x)->x) per config."""
+    if cfg.nonparam_ln:
+        return (lambda dtype: {}), (lambda p, x: layer_norm({}, x, cfg.norm_eps))
+    if cfg.rms_norm:
+        return (
+            lambda dtype: rms_norm_init(cfg.d_model, dtype),
+            lambda p, x: rms_norm(p, x, cfg.norm_eps),
+        )
+    return (
+        lambda dtype: layer_norm_init(cfg.d_model, dtype),
+        lambda p, x: layer_norm(p, x, cfg.norm_eps),
+    )
+
+
+# --- rotary ------------------------------------------------------------------
+
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float) -> tuple:
+    """cos/sin tables for given positions: (..., dim//2), fp32."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# --- FFN ---------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": truncated_normal(k1, (d_model, d_ff), 1.0, dtype),
+        "wi_up": truncated_normal(k2, (d_model, d_ff), 1.0, dtype),
+        "wo": truncated_normal(k3, (d_ff, d_model), 1.0, dtype),
+    }
+
+
+def swiglu(params, x: jax.Array) -> jax.Array:
+    g = x @ params["wi_gate"].astype(x.dtype)
+    u = x @ params["wi_up"].astype(x.dtype)
+    return (jax.nn.silu(g) * u) @ params["wo"].astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return {"embedding": truncated_normal(key, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Project to vocab logits; fp32 output for a stable softmax/loss."""
+    return (x @ params["embedding"].astype(x.dtype).T).astype(jnp.float32)

@@ -1,0 +1,148 @@
+"""Multi-head Latent Attention (DeepSeek-V2), kv_lora_rank-compressed cache.
+
+Train/prefill: decompress K/V per position and reuse the generic chunked
+flash path (KV=H, G=1).  Decode: *absorbed* form — queries are projected into
+the latent space so the cache holds only (kv_lora_rank + qk_rope_dim) per
+token (6.4x smaller than GQA here), and attention reads the compressed cache
+directly.  This is the paper's ELEN lesson at the KV-cache level: smaller
+elements-per-token moves the memory-roofline term down.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ml = cfg.mla
+    ks = jax.random.split(key, 5)
+    qd = ml.qk_nope_dim + ml.qk_rope_dim
+    return {
+        "wq": layers.dense_init(ks[0], d, h * qd, dtype),
+        "w_dkv": layers.dense_init(ks[1], d, ml.kv_lora_rank + ml.qk_rope_dim, dtype),
+        "kv_norm": layers.rms_norm_init(ml.kv_lora_rank, dtype),
+        "w_uk": layers.dense_init(ks[2], ml.kv_lora_rank, h * ml.qk_nope_dim, dtype),
+        "w_uv": layers.dense_init(ks[3], ml.kv_lora_rank, h * ml.v_head_dim, dtype),
+        "wo": layers.dense_init(ks[4], h * ml.v_head_dim, d, dtype),
+    }
+
+
+def _q_and_latent(params, cfg, x, positions):
+    B, S, _ = x.shape
+    h, ml = cfg.n_heads, cfg.mla
+    qd = ml.qk_nope_dim + ml.qk_rope_dim
+    q = layers.dense(params["wq"], x).reshape(B, S, h, qd)
+    q_nope, q_rope = q[..., : ml.qk_nope_dim], q[..., ml.qk_nope_dim :]
+    ckv = layers.dense(params["w_dkv"], x)
+    c, k_rope = ckv[..., : ml.kv_lora_rank], ckv[..., ml.kv_lora_rank :]
+    c = layers.rms_norm(params["kv_norm"], c, cfg.norm_eps)
+    cos, sin = layers.rope_cos_sin(positions, ml.qk_rope_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_full(params, cfg, x, positions, *, causal: bool = True) -> jax.Array:
+    """Training / prefill: decompress and run chunked flash attention."""
+    from repro.models.attention import flash_attention
+
+    B, S, _ = x.shape
+    h, ml = cfg.n_heads, cfg.mla
+    q_nope, q_rope, c, k_rope = _q_and_latent(params, cfg, x, positions)
+    k_nope = layers.dense(params["w_uk"], c).reshape(B, S, h, ml.qk_nope_dim)
+    v = layers.dense(params["w_uv"], c).reshape(B, S, h, ml.v_head_dim)
+    # pack nope+rope into one contraction dim; rope part shared across heads
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)  # (B,S,h,qd)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, ml.qk_rope_dim))],
+        axis=-1,
+    )
+    q5 = q_cat.reshape(B, S, h, 1, q_cat.shape[-1])  # KV=h, G=1
+    out = flash_attention(q5, k_cat, v, causal=causal)
+    out = out.reshape(B, S, h * ml.v_head_dim)
+    return layers.dense(params["wo"], out)
+
+
+def mla_full_with_cache(params, cfg, x, positions):
+    """Prefill variant that also returns the compressed-latent cache."""
+    from repro.models.attention import flash_attention
+
+    B, S, _ = x.shape
+    h, ml = cfg.n_heads, cfg.mla
+    q_nope, q_rope, c, k_rope = _q_and_latent(params, cfg, x, positions)
+    k_nope = layers.dense(params["w_uk"], c).reshape(B, S, h, ml.qk_nope_dim)
+    v = layers.dense(params["w_uv"], c).reshape(B, S, h, ml.v_head_dim)
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, h, ml.qk_rope_dim))],
+        axis=-1,
+    )
+    out = flash_attention(q_cat.reshape(B, S, h, 1, q_cat.shape[-1]), k_cat, v, causal=True)
+    out = out.reshape(B, S, h * ml.v_head_dim)
+    return layers.dense(params["wo"], out), {"c": c, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype, layers_stacked: int = 1):
+    ml = cfg.mla
+    return {
+        "c": jnp.zeros((layers_stacked, batch, max_len, ml.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((layers_stacked, batch, max_len, ml.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params, cfg, x, cache_c, cache_kr, pos):
+    """Absorbed one-token decode over the compressed cache — READ-ONLY.
+
+    x: (B,1,d); cache_c: (B,S,lora); cache_kr: (B,S,rope).
+    Returns (y, c_new (B,1,lora), kr_new (B,1,rope)); the caller commits the
+    new-token slices into the stacked cache once per step.
+    """
+    B = x.shape[0]
+    h, ml = cfg.n_heads, cfg.mla
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _q_and_latent(params, cfg, x, positions)
+    S = cache_c.shape[1]
+    # absorb W_uk into the query: q_lat (B,1,h,lora)
+    w_uk = params["w_uk"]["w"].reshape(ml.kv_lora_rank, h, ml.qk_nope_dim)
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, w_uk.astype(q_nope.dtype))
+    scale = 1.0 / math.sqrt(ml.qk_nope_dim + ml.qk_rope_dim)
+    s_old = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, cache_c, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr, preferred_element_type=jnp.float32)
+    ) * scale
+    mask = jnp.arange(S)[None, :] < pos
+    s_old = jnp.where(mask[None, None, :, :], s_old, NEG_INF)
+    s_new = (
+        jnp.einsum("bqhl,bsl->bhqs", q_lat, c_new, preferred_element_type=jnp.float32)
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_new, preferred_element_type=jnp.float32)
+    ) * scale
+    # two-way online-softmax merge — a concat along the model-sharded seq
+    # axis would all-gather the latent cache per layer (see attention.py)
+    m_old = s_old.max(axis=-1)                      # (B,h,1)
+    p_old = jnp.exp(s_old - m_old[..., None])
+    l_old = p_old.sum(axis=-1)
+    ctx_old = jnp.einsum(
+        "bhqs,bsl->bqhl", p_old.astype(cache_c.dtype), cache_c,
+        preferred_element_type=jnp.float32,
+    )
+    s_new1 = s_new[..., 0]                          # (B,h,1)
+    m = jnp.maximum(m_old, s_new1)
+    w_old = jnp.exp(m_old - m)
+    w_new = jnp.exp(s_new1 - m)
+    denom = (l_old * w_old + w_new).transpose(0, 2, 1)[..., None]  # (B,1,h,1)
+    wo_ = w_old.transpose(0, 2, 1)[..., None]
+    wn_ = w_new.transpose(0, 2, 1)[..., None]
+    ctx = ((ctx_old * wo_ + c_new.astype(jnp.float32)[:, :, None, :] * wn_)
+           / denom).astype(x.dtype)
+    w_uv = params["w_uv"]["w"].reshape(ml.kv_lora_rank, h, ml.v_head_dim)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv.astype(x.dtype))
+    out = out.reshape(B, 1, h * ml.v_head_dim)
+    return layers.dense(params["wo"], out), c_new, kr_new

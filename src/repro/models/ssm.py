@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), TPU-adapted.
+
+Training / prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of Q tokens; within a chunk the recurrence is computed as a masked
+(decay-weighted) attention-like contraction (MXU-friendly — this is the
+"duality"), and chunk-final states are propagated with a sequential
+``lax.scan`` across chunks.  Decode is the O(1) recurrence
+``S <- exp(dt*A) S + dt * B (x) x``, read out as ``y = C . S + D x``.
+
+State math is fp32 (long products of decays underflow bf16).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, d, di, nh, conv_ch
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    """Projections are kept as separate matrices (wz/wx/wBC/wdt) rather than
+    one fused in_proj so each shards cleanly under tensor parallelism:
+    head-structured outputs (z, x, dt) column-shard over the ``model`` axis,
+    the small group-shared B/C projection replicates."""
+    s, d, di, nh, conv_ch = _dims(cfg)
+    gn2 = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 7)
+    return {
+        "wz": layers.dense_init(ks[0], d, di, dtype),
+        "wx": layers.dense_init(ks[1], d, di, dtype),
+        "wBC": layers.dense_init(ks[2], d, gn2, dtype),
+        "wdt": layers.dense_init(ks[3], d, nh, dtype),
+        "conv_x_w": layers.truncated_normal(ks[4], (s.d_conv, di), 1.0, dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_BC_w": layers.truncated_normal(ks[5], (s.d_conv, gn2), 1.0, dtype),
+        "conv_BC_b": jnp.zeros((gn2,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": layers.rms_norm_init(di, dtype),
+        "out_proj": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _project_in(params, cfg, x):
+    """x (B,S,d) -> z (B,S,di), xBC (B,S,di+2GN) pre-conv, dt (B,S,nh)."""
+    z = layers.dense(params["wz"], x)
+    xs = layers.dense(params["wx"], x)
+    bc = layers.dense(params["wBC"], x)
+    dt = layers.dense(params["wdt"], x)
+    return z, jnp.concatenate([xs, bc], axis=-1), dt
+
+
+def _conv_w_b(params):
+    w = jnp.concatenate([params["conv_x_w"], params["conv_BC_w"]], axis=-1)
+    b = jnp.concatenate([params["conv_x_b"], params["conv_BC_b"]], axis=-1)
+    return w, b
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over seq; d_conv taps as shifted adds (d_conv<=4)."""
+    d_conv = w.shape[0]
+    S = xBC.shape[1]
+    out = jnp.zeros_like(xBC)
+    for i in range(d_conv):
+        shift = d_conv - 1 - i  # tap i sees x[t - shift]
+        xs = xBC if shift == 0 else jnp.pad(xBC, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        out = out + xs * w[i].astype(xBC.dtype)
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _gated_out(params, cfg, y_flat, z):
+    y = layers.rms_norm(params["norm"], y_flat * jax.nn.silu(z), cfg.norm_eps)
+    return layers.dense(params["out_proj"], y)
+
+
+def mamba_full(
+    params,
+    cfg,
+    x: jax.Array,
+    *,
+    initial_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """Chunked SSD forward.  x: (B, S, d) -> (B, S, d) [, final state]."""
+    s, d, di, nh, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    G, N, P, Q = s.n_groups, s.d_state, s.head_dim, s.chunk
+    Q = min(Q, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+
+    z, xBC, dt = _project_in(params, cfg, x)
+    cw, cb = _conv_w_b(params)
+    xBC = _causal_conv(xBC, cw, cb)
+    xs = xBC[..., :di].reshape(B, S, nh, P)
+    Bm = xBC[..., di : di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N :].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    hpg = nh // G  # heads per group
+    # per-chunk tiles, chunk axis LEADING for the scan: (nc, B, Q, ...)
+    xs = jnp.moveaxis(xs.reshape(B, nc, Q, nh, P), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(B, nc, Q, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, nc, Q, G, N), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, Q, nh), 1, 0)
+
+    S0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, nh, N, P), jnp.float32)
+    )
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(S_prev, inp):
+        """One SSD chunk: intra-chunk dual term + state passing.
+
+        All O(Q^2) tensors are transient within this step; jax.checkpoint
+        keeps scan autodiff from storing them per chunk.
+        """
+        x_c, B_c, C_c, dt_c = inp  # (B,Q,nh,P), (B,Q,G,N), (B,Q,G,N), (B,Q,nh)
+        dA = dt_c * A  # (B,Q,nh)
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1]  # (B,nh)
+        xf = x_c.astype(jnp.float32)
+        Bh = jnp.repeat(B_c.astype(jnp.float32), hpg, axis=2)  # (B,Q,nh,N)
+        Ch = jnp.repeat(C_c.astype(jnp.float32), hpg, axis=2)
+
+        # intra-chunk: M[q,j] = (C_q.B_j) exp(cum_q - cum_j) dt_j,  j <= q
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,Q,nh)
+        decay = jnp.where(tri[None, :, :, None], decay, -jnp.inf)
+        M = (
+            jnp.einsum("bqhn,bjhn->bqjh", Ch, Bh, preferred_element_type=jnp.float32)
+            * jnp.exp(decay)
+            * dt_c[:, None, :, :]
+        )
+        y_c = jnp.einsum("bqjh,bjhp->bqhp", M, xf, preferred_element_type=jnp.float32)
+
+        # inter-chunk: y_q += C_q . (exp(cum_q) * S_prev)
+        y_c = y_c + jnp.einsum(
+            "bqhn,bhnp->bqhp", Ch * jnp.exp(cum)[..., None], S_prev,
+            preferred_element_type=jnp.float32,
+        )
+        y_c = y_c + params["D"][None, None, :, None] * xf
+
+        # chunk-final local state + state passing
+        w = jnp.exp(total[:, None, :] - cum) * dt_c  # (B,Q,nh)
+        S_local = jnp.einsum(
+            "bqh,bqhn,bqhp->bhnp", w, Bh, xf, preferred_element_type=jnp.float32
+        )
+        S_new = jnp.exp(total)[:, :, None, None] * S_prev + S_local
+        return S_new, y_c
+
+    S_final, y = jax.lax.scan(
+        jax.checkpoint(chunk_step), S0, (xs, Bc, Cc, dtc)
+    )
+    # y: (nc, B, Q, nh, P) -> (B, S, nh*P)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, nc * Q, nh * P)[:, :S].astype(x.dtype)
+    out = _gated_out(params, cfg, y, z)
+    if return_state:
+        return out, S_final
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype, layers_stacked: int = 1):
+    s, d, di, nh, conv_ch = _dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((layers_stacked, batch, nh, s.d_state, s.head_dim), jnp.float32),
+        "conv_state": jnp.zeros((layers_stacked, batch, s.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(params, cfg, x, ssm_state, conv_state):
+    """One-token step.  x: (B,1,d); ssm_state: (B,nh,N,P); conv_state:
+    (B, d_conv-1, conv_ch).  Returns (y, ssm_state, conv_state)."""
+    s, d, di, nh, conv_ch = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B = x.shape[0]
+    z, xBC, dt = _project_in(params, cfg, x)
+    cw, cb = _conv_w_b(params)
+    window = jnp.concatenate([conv_state, xBC[:, 0:1, :]], axis=1)  # (B,d_conv,ch)
+    conv_out = jnp.einsum("btc,tc->bc", window, cw.astype(x.dtype))
+    conv_out = jax.nn.silu(conv_out + cb.astype(x.dtype))
+    new_conv_state = window[:, 1:, :]
+
+    xs = conv_out[:, :di].reshape(B, nh, P)
+    Bm = conv_out[:, di : di + G * N].reshape(B, G, N)
+    Cm = conv_out[:, di + G * N :].reshape(B, G, N)
+    hpg = nh // G
+    Bh = jnp.repeat(Bm, hpg, axis=1).astype(jnp.float32)  # (B,nh,N)
+    Chd = jnp.repeat(Cm, hpg, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)  # (B,nh)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dt, Bh, xs.astype(jnp.float32))
+    S_new = decay[:, :, None, None] * ssm_state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Chd, S_new)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    out = _gated_out(params, cfg, y, z)
+    return out, S_new, new_conv_state

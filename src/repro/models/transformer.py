@@ -1,0 +1,425 @@
+"""Decoder-only LM core covering dense / MoE / SSM / hybrid architectures.
+
+Depth is expressed as ``n_superblocks`` repetitions of a *superblock* (the
+smallest repeating layer pattern, e.g. Jamba's [m m m m a m m m]); parameters
+of all superblocks are stacked on a leading axis and the forward pass is a
+``lax.scan`` over that axis, so the lowered HLO is O(1) in depth — essential
+for 72–80-layer models compiled against 512-device meshes.
+
+Paths:
+* ``forward``      — teacher-forced logits for training (optionally remat'd)
+* ``prefill``      — forward + KV/SSM cache construction, last-token logits
+* ``decode_step``  — one-token serve step over fixed-size caches
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind, ModelConfig
+from repro.models import attention, layers, mla, moe, ssm
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _slot_is_moe(cfg: ModelConfig, slot: int) -> bool:
+    offset = 1 if (cfg.moe is not None and cfg.moe.first_dense) else 0
+    return cfg._is_moe_layer(offset + slot)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_slot(key, cfg: ModelConfig, kind: LayerKind, is_moe: bool, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    norm_init, _ = layers.make_norm(cfg)
+    p: Dict[str, Any] = {"norm1": norm_init(dtype), "norm2": norm_init(dtype)}
+    if kind == LayerKind.ATTN:
+        if cfg.mla is not None:
+            p["mla"] = mla.init_mla(k1, cfg, dtype)
+        else:
+            p["attn"] = attention.init_attention(k1, cfg, dtype)
+    else:
+        p["mamba"] = ssm.init_mamba(k1, cfg, dtype)
+    if is_moe:
+        p["moe"] = moe.init_moe(k2, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["ffn"] = layers.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        del p["norm2"]  # pure-Mamba block: norm -> mixer -> residual only
+    return p
+
+
+def _init_superblock(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, len(cfg.superblock))
+    return {
+        f"slot{i}": _init_slot(ks[i], cfg, kind, _slot_is_moe(cfg, i), dtype)
+        for i, kind in enumerate(cfg.superblock)
+    }
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    k_emb, k_blocks, k_first, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+    }
+    norm_init, _ = layers.make_norm(cfg)
+    params["final_norm"] = norm_init(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype)
+    if cfg.moe is not None and cfg.moe.first_dense:
+        params["first_block"] = _init_slot(
+            k_first, cfg, LayerKind.ATTN, is_moe=False, dtype=dtype
+        )
+    nsb = cfg.n_superblocks
+    keys = jax.random.split(k_blocks, nsb)
+    params["blocks"] = jax.vmap(lambda k: _init_superblock(k, cfg, dtype))(keys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward blocks
+# --------------------------------------------------------------------------
+
+
+def _apply_slot_full(p, cfg, kind, is_moe, x, positions, collect_cache: bool):
+    from repro.distributed import context as mesh_ctx
+
+    plan = mesh_ctx.current()
+    _, norm_fn = layers.make_norm(cfg)
+    h = norm_fn(p["norm1"], x)
+    cache = None
+    if kind == LayerKind.ATTN:
+        if cfg.mla is not None:
+            if collect_cache:
+                att, cache = mla.mla_full_with_cache(p["mla"], cfg, h, positions)
+            else:
+                att = mla.mla_full(p["mla"], cfg, h, positions)
+        else:
+            if collect_cache:
+                att, cache = attention.attention_full_with_cache(
+                    p["attn"], cfg, h, positions
+                )
+            else:
+                att = attention.attention_full(p["attn"], cfg, h, positions)
+    else:
+        if collect_cache:
+            att, state = ssm.mamba_full(p["mamba"], cfg, h, return_state=True)
+            # conv state = last d_conv-1 pre-conv xBC rows; recompute cheaply
+            cache = {"ssm_state": state, "conv_state": _conv_tail(p["mamba"], cfg, h)}
+        else:
+            att = ssm.mamba_full(p["mamba"], cfg, h)
+    # sequence-parallel residual: GSPMD turns the output-projection
+    # all-reduce into reduce-scatter (+ all-gather on the next block entry)
+    x = mesh_ctx.shard_seq(x + att, plan)
+    if is_moe:
+        f, aux = moe.moe_ffn(p["moe"], cfg, norm_fn(p["norm2"], x))
+    elif "ffn" in p:
+        f, aux = layers.swiglu(p["ffn"], norm_fn(p["norm2"], x)), jnp.zeros((), jnp.float32)
+    else:
+        return x, jnp.zeros((), jnp.float32), cache
+    return mesh_ctx.shard_seq(x + f, plan), aux, cache
+
+
+def _conv_tail(p_mamba, cfg, h):
+    """Pre-activation conv window tail for decode handoff: (B, d_conv-1, ch)."""
+    _, xBC, _ = ssm._project_in(p_mamba, cfg, h[:, -(cfg.ssm.d_conv - 1) :, :])
+    return xBC
+
+
+def _block_full(cfg, collect_cache):
+    def fn(p_blk, x, positions):
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(cfg.superblock):
+            x, aux, cache = _apply_slot_full(
+                p_blk[f"slot{i}"], cfg, kind, _slot_is_moe(cfg, i), x, positions,
+                collect_cache,
+            )
+            aux_total = aux_total + aux
+            if collect_cache:
+                caches[f"slot{i}"] = cache
+        return x, aux_total, caches
+
+    return fn
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    img_embeds: Optional[jax.Array] = None,
+    remat: str = "none",
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward.  tokens: (B, S_text).  Returns (logits fp32
+    (B,S,V), moe_aux).  With ``img_embeds`` (B, S_img, d) the sequence is
+    [img, text] (InternVL-style stub frontend)."""
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if "first_block" in params:
+        x, aux, _ = _apply_slot_full(
+            params["first_block"], cfg, LayerKind.ATTN, False, x, positions, False
+        )
+        aux_total = aux_total + aux
+
+    block = _block_full(cfg, collect_cache=False)
+
+    def scan_body(x, p_blk):
+        y, aux, _ = block(p_blk, x, positions)
+        return y, aux
+
+    scan_fn = _remat(scan_body, remat)
+    x, auxs = jax.lax.scan(scan_fn, x, params["blocks"])
+    aux_total = aux_total + auxs.sum()
+
+    _, norm_fn = layers.make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x).astype(jnp.float32)
+    return logits, aux_total
+
+
+def lm_loss(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    mask: Optional[jax.Array] = None,
+    real_vocab: Optional[int] = None,
+) -> jax.Array:
+    """Token-mean cross entropy.  labels: (B, S) int32; -1 = ignore.
+    ``real_vocab`` masks the sharding-padded tail of the vocab dim."""
+    V = logits.shape[-1]
+    if real_vocab is not None and real_vocab < V:
+        pad_mask = jnp.arange(V) < real_vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    if mask is None:
+        mask = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction, not take_along_axis: a vocab-dim gather would
+    # force GSPMD to all-gather the vocab-sharded fp32 logits.  bf16 one-hot
+    # (exact for 0/1) halves the temp; accumulate fp32.
+    onehot = jax.nn.one_hot(labels_safe, V, dtype=jnp.bfloat16)
+    gold = jnp.einsum(
+        "bsv,bsv->bs", logits.astype(jnp.bfloat16), onehot,
+        preferred_element_type=jnp.float32,
+    )
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Fixed-size cache pytree matching the superblock structure."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    nsb = cfg.n_superblocks
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32), "blocks": {}}
+    for i, kind in enumerate(cfg.superblock):
+        if kind == LayerKind.ATTN:
+            if cfg.mla is not None:
+                c = mla.init_mla_cache(cfg, batch, max_len, dtype, nsb)
+            else:
+                kv, hd = cfg.n_kv_heads, cfg.head_dim
+                c = {
+                    "k": jnp.zeros((nsb, batch, max_len, kv, hd), dtype),
+                    "v": jnp.zeros((nsb, batch, max_len, kv, hd), dtype),
+                }
+        else:
+            c = {
+                "ssm_state": jnp.zeros(
+                    (nsb, batch, cfg.ssm.n_heads(cfg.d_model), cfg.ssm.d_state,
+                     cfg.ssm.head_dim), jnp.float32,
+                ),
+                "conv_state": jnp.zeros(
+                    (nsb, batch, cfg.ssm.d_conv - 1,
+                     cfg.ssm.d_inner(cfg.d_model)
+                     + 2 * cfg.ssm.n_groups * cfg.ssm.d_state), dtype,
+                ),
+            }
+        cache["blocks"][f"slot{i}"] = c
+    if cfg.moe is not None and cfg.moe.first_dense:
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        if cfg.mla is not None:
+            cache["first_block"] = jax.tree.map(
+                lambda a: a[0], mla.init_mla_cache(cfg, batch, max_len, dtype, 1)
+            )
+        else:
+            cache["first_block"] = {
+                "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+            }
+    return cache
+
+
+def _apply_slot_decode(p, cfg, kind, is_moe, x, cache, pos):
+    """Returns (x, delta): delta holds NEW-TOKEN slices for attention caches
+    (committed by the caller in one top-level update) and full replacement
+    states for SSM slots."""
+    _, norm_fn = layers.make_norm(cfg)
+    h = norm_fn(p["norm1"], x)
+    if kind == LayerKind.ATTN:
+        if cfg.mla is not None:
+            att, c_new, kr_new = mla.mla_decode(
+                p["mla"], cfg, h, cache["c"], cache["k_rope"], pos
+            )
+            delta = {"c": c_new, "k_rope": kr_new}
+        else:
+            att, k_new, v_new = attention.attention_decode(
+                p["attn"], cfg, h, cache["k"], cache["v"], pos
+            )
+            delta = {"k": k_new, "v": v_new}
+    else:
+        att, s_new, conv_new = ssm.mamba_decode(
+            p["mamba"], cfg, h, cache["ssm_state"], cache["conv_state"]
+        )
+        delta = {"ssm_state": s_new, "conv_state": conv_new}
+    x = x + att
+    if is_moe:
+        f, _ = moe.moe_ffn(p["moe"], cfg, norm_fn(p["norm2"], x))
+    elif "ffn" in p:
+        f = layers.swiglu(p["ffn"], norm_fn(p["norm2"], x))
+    else:
+        return x, delta
+    return x + f, delta
+
+
+_SEQ_CACHE_KEYS = ("k", "v", "c", "k_rope")  # (.., S, ...) caches, seq axis
+
+
+def _commit(cache_leaf, delta_leaf, pos, key: str, stacked: bool):
+    """Write a new-token slice (or replacement state) into the cache."""
+    if key in _SEQ_CACHE_KEYS:
+        start = (0, 0, pos) + (0,) * (cache_leaf.ndim - 3) if stacked else (
+            (0, pos) + (0,) * (cache_leaf.ndim - 2)
+        )
+        return jax.lax.dynamic_update_slice(
+            cache_leaf, delta_leaf.astype(cache_leaf.dtype), start
+        )
+    return delta_leaf.astype(cache_leaf.dtype)  # SSM states: full replace
+
+
+def decode_step(
+    params, cfg: ModelConfig, tokens: jax.Array, cache: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serve step: tokens (B,1) + cache -> (logits (B,1,V) fp32, cache)."""
+    pos = cache["pos"]
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+
+    new_cache: Dict[str, Any] = {"pos": pos + 1, "blocks": None}
+    if "first_block" in params:
+        x, fb_delta = _apply_slot_decode(
+            params["first_block"], cfg, LayerKind.ATTN, False, x,
+            cache["first_block"], pos,
+        )
+        new_cache["first_block"] = {
+            k: _commit(cache["first_block"][k], d, pos, k, stacked=False)
+            for k, d in fb_delta.items()
+        }
+
+    def scan_body(x, inp):
+        p_blk, c_blk = inp
+        deltas = {}
+        for i, kind in enumerate(cfg.superblock):
+            x, delta = _apply_slot_decode(
+                p_blk[f"slot{i}"], cfg, kind, _slot_is_moe(cfg, i), x,
+                c_blk[f"slot{i}"], pos,
+            )
+            deltas[f"slot{i}"] = delta
+        return x, deltas
+
+    x, deltas = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+    # single top-level commit: deltas are stacked (nsb, B, 1, ...) slices
+    new_cache["blocks"] = {
+        slot: {
+            k: _commit(cache["blocks"][slot][k], d, pos, k, stacked=True)
+            for k, d in slot_deltas.items()
+        }
+        for slot, slot_deltas in deltas.items()
+    }
+
+    _, norm_fn = layers.make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    img_embeds: Optional[jax.Array] = None,
+    remat: str = "none",
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process the prompt, build caches, return last-token logits + cache."""
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+    cache: Dict[str, Any] = {"pos": jnp.full((), S, jnp.int32)}
+    if "first_block" in params:
+        x, _, fb_cache = _apply_slot_full(
+            params["first_block"], cfg, LayerKind.ATTN, False, x, positions, True
+        )
+        cache["first_block"] = fb_cache
+
+    block = _block_full(cfg, collect_cache=True)
+
+    def scan_body(x, p_blk):
+        y, _, caches = block(p_blk, x, positions)
+        return y, caches
+
+    scan_fn = _remat(scan_body, remat)
+    x, block_caches = jax.lax.scan(scan_fn, x, params["blocks"])
+    cache["blocks"] = block_caches
+
+    _, norm_fn = layers.make_norm(cfg)
+    x_last = norm_fn(params["final_norm"], x[:, -1:, :])
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x_last)
+    else:
+        logits = layers.dense(params["lm_head"], x_last).astype(jnp.float32)
+    return logits, cache

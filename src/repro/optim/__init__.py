@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    apply_update,
+    global_norm,
+    init_opt_state,
+    schedule,
+)

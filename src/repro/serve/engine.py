@@ -1,0 +1,110 @@
+"""Batched serving engine: iteration-level batched greedy decoding over a
+fixed-size KV cache, fed from a request queue.
+
+Requests are admitted in waves of up to ``max_batch``; a wave advances in
+LOCKSTEP — at global position t each slot consumes its own prompt token (if
+its prompt is longer than t) or its last generated token.  This keeps the
+scalar cache position uniform across the batch (correct by construction
+with the one-commit-per-step cache layout) while still exercising the real
+serving shape: one fused ``decode_step`` for the whole batch per token, the
+decode_* dry-run cell.  Ragged prompts are handled by per-slot switchover
+masking — the predication idea at the serving layer.
+
+A slot-level continuously-batched engine (per-slot write indices + scatter
+commits + paged cache blocks) is the production extension; the fused-step /
+fixed-slot structure here is its inner loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never stops early
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        self.generated: List[int] = []
+        self.done = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.completed: Dict[int, Request] = {}
+        self.steps = 0
+        self._decode = jax.jit(
+            lambda p, t, c: transformer.decode_step(p, cfg, t, c)
+        )
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # -- one wave -------------------------------------------------------------
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = self.max_batch
+        cache = transformer.init_cache(self.cfg, B, self.max_len)
+        prompt_len = np.array(
+            [len(r.prompt) for r in wave] + [1] * (B - len(wave)), np.int32
+        )
+        horizon = int(max(
+            len(r.prompt) + r.max_new_tokens for r in wave
+        ))
+        assert horizon <= self.max_len, "wave exceeds cache"
+        tokens = np.zeros((B, 1), np.int32)
+        for s, r in enumerate(wave):
+            tokens[s, 0] = r.prompt[0]
+
+        for t in range(horizon - 1):
+            logits, cache = self._decode(self.params, jnp.asarray(tokens), cache)
+            self.steps += 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
+            for s, r in enumerate(wave):
+                if r.done:
+                    continue
+                if t + 1 < prompt_len[s]:
+                    tokens[s, 0] = r.prompt[t + 1]  # still consuming prompt
+                else:
+                    tok = int(nxt[s])
+                    r.generated.append(tok)
+                    tokens[s, 0] = tok
+                    if (len(r.generated) >= r.max_new_tokens or tok == r.eos_id):
+                        r.done = True
+            if all(r.done for r in wave):
+                break
+        for r in wave:
+            r.done = True
+            self.completed[r.uid] = r
+
+    # -- public ----------------------------------------------------------------
+
+    def run_until_drained(self, max_waves: int = 1000) -> Dict[int, Request]:
+        waves = 0
+        while self.queue:
+            wave = [self.queue.popleft()
+                    for _ in range(min(self.max_batch, len(self.queue)))]
+            self._run_wave(wave)
+            waves += 1
+            if waves > max_waves:
+                raise RuntimeError("serve loop did not drain")
+        return self.completed

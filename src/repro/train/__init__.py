@@ -1,0 +1,11 @@
+from repro.train.steps import (  # noqa: F401
+    BASELINE_RUN,
+    OPTIMIZED_RUN,
+    RunConfig,
+    init_model,
+    loss_fn,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    model_forward,
+)

@@ -1,0 +1,156 @@
+"""Step functions: train_step / prefill_step / decode_step for every family.
+
+``make_train_step(cfg, run)`` closes over the model family (dense LM, VLM
+stub, encoder-decoder) and the run options (remat policy, microbatching,
+MoE aux weight) and returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable for
+``jax.jit`` with donated params/opt_state.
+
+Gradient accumulation: with ``run.microbatches > 1`` the global batch is
+split on the leading axis and a ``lax.scan`` accumulates fp32 gradients —
+the collective-optimization lever that trades memory-term for step latency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer, whisper
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    remat: str = "dots"  # none | dots | full
+    microbatches: int = 1
+    moe_aux_weight: float = 0.01
+    zero: bool = True  # ZeRO-shard optimizer state over data axes
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    kv_cache_dtype: str = "bfloat16"  # reserved: int8 quantized decode cache (next §Perf lever)
+
+
+BASELINE_RUN = RunConfig(remat="full", microbatches=1, zero=False)
+# `full` remat is the default: `dots` saves every projection output
+# (~1 GB/layer/device at 4k x 256) and blows the 16 GB HBM budget on most
+# cells; where it fits it is a §Perf lever (see EXPERIMENTS.md).
+OPTIMIZED_RUN = RunConfig(remat="full", microbatches=1, zero=True)
+
+
+# --------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return whisper.init_whisper(key, cfg)
+    return transformer.init_lm(key, cfg)
+
+
+def model_forward(params, cfg: ModelConfig, batch: Dict[str, Any], *, remat: str):
+    """Returns (logits, aux, labels) aligned per family."""
+    if cfg.is_encoder_decoder:
+        logits, aux = whisper.forward(
+            params, cfg, batch["enc_frames"], batch["tokens"], remat=remat
+        )
+        return logits, aux, batch.get("labels")
+    if "img_embeds" in batch:
+        logits, aux = transformer.forward(
+            params, cfg, batch["tokens"], img_embeds=batch["img_embeds"], remat=remat
+        )
+        # image prefix positions carry no labels
+        n_img = batch["img_embeds"].shape[1]
+        logits = logits[:, n_img:, :]
+        return logits, aux, batch.get("labels")
+    logits, aux = transformer.forward(params, cfg, batch["tokens"], remat=remat)
+    return logits, aux, batch.get("labels")
+
+
+def loss_fn(params, cfg: ModelConfig, batch, run: RunConfig):
+    logits, aux, labels = model_forward(params, cfg, batch, remat=run.remat)
+    loss = transformer.lm_loss(logits, labels, real_vocab=cfg.vocab)
+    total = loss + run.moe_aux_weight * aux
+    return total, {"loss": loss, "moe_aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig):
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (total, metrics), grads = grad_fn(params, cfg, batch, run)
+        return grads, metrics
+
+    def accumulated(params, batch):
+        n = run.microbatches
+
+        def resplit(x):
+            b = x.shape[0]
+            assert b % n == 0, f"batch {b} % microbatches {n}"
+            return x.reshape(n, b // n, *x.shape[1:])
+
+        mb = jax.tree.map(resplit, batch)
+        g0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def body(carry, mb_i):
+            gacc, macc = carry
+            grads, metrics = single(params, mb_i)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / n, gacc, grads)
+            macc = jax.tree.map(lambda a, m: a + m / n, macc, metrics)
+            return (gacc, macc), None
+
+        m0 = {"loss": jnp.zeros((), jnp.float32), "moe_aux": jnp.zeros((), jnp.float32)}
+        (grads, metrics), _ = jax.lax.scan(body, (g0, m0), mb)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if run.microbatches > 1:
+            grads, metrics = accumulated(params, batch)
+        else:
+            grads, metrics = single(params, batch)
+        params, opt_state, stats = adamw.apply_update(params, grads, opt_state, run.opt)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig = OPTIMIZED_RUN):
+    if cfg.is_encoder_decoder:
+
+        def prefill_step(params, *, enc_frames, tokens):
+            return whisper.prefill(params, cfg, enc_frames, tokens, remat=run.remat)
+
+        return prefill_step
+
+    def prefill_step(params, *, tokens, img_embeds=None):
+        return transformer.prefill(
+            params, cfg, tokens, img_embeds=img_embeds, remat=run.remat
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, run: RunConfig = OPTIMIZED_RUN):
+    if cfg.is_encoder_decoder:
+
+        def decode_fn(params, *, tokens, cache):
+            return whisper.decode_step(params, cfg, tokens, cache)
+
+        return decode_fn
+
+    def decode_fn(params, *, tokens, cache):
+        return transformer.decode_step(params, cfg, tokens, cache)
+
+    return decode_fn

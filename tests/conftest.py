@@ -1,0 +1,37 @@
+"""Shared fixtures. Tests run on the single host CPU device (never set
+xla_force_host_platform_device_count here — the dry-run owns that knob)."""
+
+import dataclasses
+
+import jax
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import ShapeConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.fixture(scope="session")
+def smoke_shape():
+    return SMOKE_SHAPE
+
+
+def dropless(cfg):
+    """Copy of a smoke config with MoE capacity high enough to never drop
+    tokens — needed when comparing full-sequence vs per-token routing."""
+    if cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0)
+    )
+
+
+ALL_ARCHS = configs.ALL_ARCHS
+ASSIGNED_ARCHS = configs.ASSIGNED_ARCHS

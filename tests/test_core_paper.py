@@ -1,0 +1,237 @@
+"""Paper-faithful validation of the core analysis library.
+
+These tests pin the reproduction to the paper's OWN numbers:
+  * VB = 2 (FP64) / 4 (FP32) on 128-bit SVE          (Fig. 3a dashed lines)
+  * SpMV: predicated R_ins ~= 2x, fixed-width ~= 1x  (Fig. 3a SpMV bars)
+  * STREAM reduction ~ VB but NO predicted speedup   (Fig. 3b / roofline)
+  * synthetic SpMV: speedup saturates at VB as AI grows (Fig. 6)
+  * decision tree reproduces Table 3's 26-case classification
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import hw, metrics, roofline
+from repro.core.counters import Events, events_from_analytic
+from repro.core.decision_tree import PerfClass, classify
+from repro.core.metrics import VectorizationReport
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 — VB and R_ins
+# ---------------------------------------------------------------------------
+
+
+def test_vb_grace_fp64_is_2():
+    assert metrics.vectorization_bound(hw.GRACE_CORE, "fp64") == 2.0
+
+
+def test_vb_grace_fp32_is_4():
+    assert metrics.vectorization_bound(hw.GRACE_CORE, "fp32") == 4.0
+
+
+def test_vb_grace_fp16_is_8():
+    assert metrics.vectorization_bound(hw.GRACE_CORE, "fp16") == 8.0
+
+
+def test_instruction_reduction_basic():
+    assert metrics.instruction_reduction(100, 50) == 2.0
+    assert metrics.instruction_reduction(100, 100) == 1.0
+    assert metrics.instruction_reduction(0, 0) == 1.0
+
+
+def test_amdahl_r_ins_collapses_with_serial_fraction():
+    """Paper Sec. 4.1: threading-runtime instructions crush R_ins."""
+    assert metrics.amdahl_r_ins(4.0, 1.0) == pytest.approx(4.0)
+    assert metrics.amdahl_r_ins(4.0, 0.5) == pytest.approx(1.6)
+    assert metrics.amdahl_r_ins(4.0, 0.0) == pytest.approx(1.0)
+    # monotone in f
+    rs = [metrics.amdahl_r_ins(4.0, f) for f in np.linspace(0, 1, 11)]
+    assert all(b >= a for a, b in zip(rs, rs[1:]))
+
+
+def test_spmv_predication_reproduces_fig3a():
+    """Ragged rows: predicated (SVE) ~2x vs fixed-width (ASIMD) ~1x."""
+    from repro.kernels.spmv.ops import issue_counts
+
+    rng = np.random.default_rng(0)
+    row_nnz = rng.integers(1, 65, size=4096)  # ragged in [1, 64]
+    counts = issue_counts(row_nnz, width=128, lane=64)
+    # SVE-style: every row fits one predicated tile -> R = mean(nnz) ~ 32x/...
+    # in ELEMENT units lane=64: ceil(nnz/64)=1 per row; scalar=sum(nnz)
+    assert counts["r_ins_predicated"] > 1.5 * counts["r_ins_fixed"]
+    # fixed width charges ceil(128/64)=2 issues/row regardless of nnz
+    assert counts["fixed_width"] == 2 * len(row_nnz)
+
+
+def test_vector_issues_ragged_vs_padded():
+    ragged = metrics.vector_issues(
+        0, "fp32", hw.GRACE_CORE, ragged_extents=[1, 2, 3, 4], tile=4
+    )
+    assert ragged == 4  # one predicated tile per row
+    padded = 4 * int(np.ceil(4 / 4))  # fixed width = max row, 1 tile each too
+    assert padded == 4
+    # with tile=2: ragged = 1+1+2+2 = 6; padded charges 2 per row = 8
+    ragged2 = metrics.vector_issues(
+        0, "fp32", hw.GRACE_CORE, ragged_extents=[1, 2, 3, 4], tile=2
+    )
+    assert ragged2 == 6
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — adapted roofline
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_inflection_shift():
+    rl64 = roofline.adapted_roofline(hw.GRACE_CORE, "fp64")
+    rl32 = roofline.adapted_roofline(hw.GRACE_CORE, "fp32")
+    # AI_IRV = AI_IRR * VB (paper Eq. 2)
+    assert rl64.ai_irv == pytest.approx(rl64.ai_irr * 2.0)
+    assert rl32.ai_irv == pytest.approx(rl32.ai_irr * 4.0)
+    # smaller elements move the knee right: fp32 knee > fp64 knee
+    assert rl32.ai_irv > rl64.ai_irv
+
+
+def test_roofline_predicted_speedup_saturates_at_vb():
+    """Fig. 6: speedup grows with AI and saturates at VB."""
+    rl = roofline.adapted_roofline(hw.GRACE_CORE, "fp64")
+    ais = np.logspace(-2, 3, 40)
+    sp = [rl.predicted_speedup(a) for a in ais]
+    assert all(b >= a - 1e-9 for a, b in zip(sp, sp[1:])), "monotone"
+    assert sp[0] == pytest.approx(1.0, abs=1e-6), "memory-bound: no speedup"
+    assert sp[-1] == pytest.approx(2.0, rel=1e-6), "saturates at VB=2"
+
+
+def test_roofline_vectorization_can_flip_compute_to_memory_bound():
+    """Paper Fig. 7 red triangles: a kernel right of the scalar knee but left
+    of the vector knee is compute-bound scalar, memory-bound vectorized."""
+    rl = roofline.adapted_roofline(hw.GRACE_CORE, "fp32")
+    ai = (rl.ai_irr + rl.ai_irv) / 2
+    assert rl.region(ai, vectorized=False) == "compute-bound"
+    assert rl.region(ai, vectorized=True) == "memory-bound"
+
+
+def test_stream_no_speedup_spmv20_speedup():
+    """STREAM triad (AI ~ 0.08) -> ~1x; synthetic SpMV repeat-20 -> ~VB."""
+    rl = roofline.adapted_roofline(hw.GRACE_CORE, "fp64")
+    # STREAM triad: 2 flops / 24 bytes
+    assert rl.predicted_speedup(2 / 24) == pytest.approx(1.0, abs=0.05)
+    # paper: repeat=20 FP64 synthetic achieved 1.8x (model: saturated ~ 2x)
+    from repro.kernels.spmv.ops import flops_bytes
+
+    fb = flops_bytes(np.full(1024, 32), repeat=20, dtype_bytes=8)
+    assert rl.predicted_speedup(fb["ai"]) > 1.7
+
+
+def test_three_term_roofline_dominance():
+    ev = events_from_analytic(
+        flops=1e15, hbm_bytes=1e12, collective_bytes=1e10, n_devices=256
+    )
+    terms = roofline.three_term(ev, hw.TPU_V5E, 256, dtype="bf16", model_flops=8e14)
+    assert terms.compute_s == pytest.approx(1e15 / (256 * 197e12))
+    assert terms.memory_s == pytest.approx(1e12 / (256 * 819e9))
+    assert terms.collective_s == pytest.approx(1e10 / (256 * 200e9))
+    assert terms.dominant == "compute"
+    assert terms.useful_flop_fraction == pytest.approx(0.8)
+    assert 0 < terms.roofline_fraction <= 1.0
+
+
+def test_model_flops_lm():
+    assert roofline.model_flops_lm(1e9, 1e6, training=True) == 6e15
+    assert roofline.model_flops_lm(1e9, 1e6, training=False) == 2e15
+    assert roofline.model_flops_lm(1e9, 1e6, training=True, n_active=5e8) == 3e15
+
+
+# ---------------------------------------------------------------------------
+# Decision tree — Table 3 reproduction
+# ---------------------------------------------------------------------------
+
+
+def _report(name, dtype, ai, r_ins, gather_frac=0.0, vec_frac=1.0):
+    hbm = 1e9
+    return VectorizationReport(
+        name=name,
+        dtype=dtype,
+        flops=ai * hbm,
+        hbm_bytes=hbm,
+        gather_bytes=gather_frac * hbm,
+        ins_scalar=r_ins * 1e6,
+        ins_vec=1e6,
+        vectorizable_fraction=vec_frac,
+    )
+
+
+# The paper's Table 3, 1-thread column, as (name, dtype, AI, R_ins, gather
+# fraction, vectorizable fraction) -> expected class.  AI values follow the
+# paper's Fig. 7 annotation (GRACE_CORE fp64 knee = 27.6/30 ~ 0.92 flop/B;
+# fp32 knee identical in scalar form).
+TABLE3_1T = [
+    ("YOLOv3", "fp32", 50.0, 3.8, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("LLM-training", "fp32", 30.0, 3.6, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("LLM-inference", "fp32", 20.0, 3.6, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("QC-simulator", "fp64", 2.0, 1.8, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("FFT1D", "fp64", 3.0, 1.02, 0.0, 0.05, PerfClass.NOT_VECTORIZED),
+    ("FFT2D", "fp64", 3.0, 1.02, 0.0, 0.05, PerfClass.NOT_VECTORIZED),
+    ("STREAM", "fp64", 2 / 24, 2.0, 0.0, 1.0, PerfClass.MEMORY_BANDWIDTH_BOUND),
+    ("DGEMM", "fp64", 100.0, 1.8, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("SGEMM", "fp32", 200.0, 3.7, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("SpMV", "fp64", 0.25, 1.99, 0.5, 1.0, PerfClass.MEMORY_LATENCY_BOUND),
+    ("Jacobi2D", "fp64", 0.375, 2.0, 0.0, 1.0, PerfClass.MEMORY_BANDWIDTH_BOUND),
+    ("AlexNet", "fp32", 40.0, 3.7, 0.0, 1.0, PerfClass.SPEEDUP),
+    ("AutoDock", "fp64", 10.0, 1.7, 0.0, 1.0, PerfClass.SPEEDUP),
+]
+
+
+@pytest.mark.parametrize("name,dtype,ai,r_ins,gf,vf,expected", TABLE3_1T)
+def test_decision_tree_table3_single_thread(name, dtype, ai, r_ins, gf, vf, expected):
+    decision = classify(_report(name, dtype, ai, r_ins, gf, vf), hw.GRACE_CORE)
+    assert decision.perf_class == expected, decision.rationale
+
+
+def test_decision_tree_qc_flips_memory_bound_at_72t():
+    """Table 3: QC simulator is Class 4 at 1 thread, Class 2 at 72 threads
+    (socket bandwidth saturates; per-core share of BW collapses)."""
+    d1 = classify(_report("QC", "fp64", 2.0, 1.8), hw.GRACE_CORE)
+    assert d1.perf_class == PerfClass.SPEEDUP
+    # at 72 threads the same kernel sees the socket: peak x72, BW only x8.3
+    d72 = classify(_report("QC", "fp64", 2.0, 1.8), hw.GRACE_SOCKET)
+    assert d72.perf_class == PerfClass.MEMORY_BANDWIDTH_BOUND
+
+
+def test_decision_tree_jacobi_flips_class1_at_72t():
+    """Table 3: Jacobi2D 72T — R_ins collapses (threading runtime) -> Class 1."""
+    r = metrics.amdahl_r_ins(2.0, 0.15)  # mostly non-vector instructions
+    d = classify(_report("Jacobi2D-72t", "fp64", 0.375, r), hw.GRACE_SOCKET)
+    assert d.perf_class == PerfClass.NOT_VECTORIZED
+
+
+def test_table3_class_counts():
+    """15/26 speedup, 6 memory-bound-no-speedup, 5 not-vectorized (paper)."""
+    cases_72t = [
+        ("YOLOv3", "fp32", 50.0, 2.4, 0.0, 1.0),
+        ("LLM-training", "fp32", 30.0, 2.2, 0.0, 1.0),
+        ("LLM-inference", "fp32", 20.0, 2.2, 0.0, 1.0),
+        ("QC-simulator", "fp64", 2.0, 1.8, 0.0, 1.0),
+        ("FFT1D", "fp64", 3.0, 1.02, 0.0, 0.05),
+        ("FFT2D", "fp64", 3.0, 1.02, 0.0, 0.05),
+        ("STREAM", "fp64", 2 / 24, 2.0, 0.0, 1.0),
+        ("DGEMM", "fp64", 100.0, 1.8, 0.0, 1.0),
+        ("SGEMM", "fp32", 200.0, 3.7, 0.0, 1.0),
+        ("SpMV", "fp64", 0.25, 1.99, 0.5, 1.0),
+        ("Jacobi2D", "fp64", 0.375, 1.05, 0.0, 0.15),
+        ("AlexNet", "fp32", 40.0, 2.5, 0.0, 1.0),
+        ("AutoDock", "fp64", 10.0, 1.7, 0.0, 1.0),
+    ]
+    chips_1t = [classify(_report(*c[:4], c[4], c[5]), hw.GRACE_CORE).perf_class
+                for c in [t[:6] for t in TABLE3_1T]]
+    chips_72 = [classify(_report(*c), hw.GRACE_SOCKET).perf_class for c in cases_72t]
+    all_classes = chips_1t + chips_72
+    counts = {c: all_classes.count(c) for c in PerfClass}
+    assert counts[PerfClass.SPEEDUP] == 15
+    assert counts[PerfClass.NOT_VECTORIZED] == 5
+    assert (
+        counts[PerfClass.MEMORY_BANDWIDTH_BOUND]
+        + counts[PerfClass.MEMORY_LATENCY_BOUND]
+        == 6
+    )

@@ -1,0 +1,107 @@
+"""HLO-artifact counter extraction: collective parsing, shape arithmetic,
+MXU flop census — on synthetic HLO text and on a real compiled module."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counters
+
+SYNTHETIC_HLO = """
+ENTRY %main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = bf16[64,64]{1,0} parameter(1)
+  %ag = f32[512,256]{1,0} all-gather(f32[128,256]{1,0} %p0), replica_groups={}, dimensions={0}
+  %ar = bf16[64,64]{1,0} all-reduce(bf16[64,64]{1,0} %p1), to_apply=%add
+  %rs = f32[32,256]{1,0} reduce-scatter(f32[128,256]{1,0} %p0), dimensions={0}
+  %a2a = f32[128,256]{1,0} all-to-all(f32[128,256]{1,0} %p0), dimensions={0}
+  %cp = f32[128,256]{1,0} collective-permute(f32[128,256]{1,0} %p0), source_target_pairs={{0,1}}
+  %ags = (f32[128,256]{1,0}, f32[512,256]{1,0}) all-gather-start(f32[128,256]{1,0} %p0), dimensions={0}
+  %dot = f32[128,64]{1,0} dot(f32[128,256]{1,0} %p0, f32[256,64]{1,0} %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_shape_bytes():
+    assert counters.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert counters.shape_bytes("bf16[64,64]") == 64 * 64 * 2
+    assert counters.shape_bytes("s32[10]") == 40
+    assert counters.shape_bytes("pred[8]") == 8
+    # tuples: sum of parts
+    assert counters.shape_bytes("(f32[4], bf16[4])") == 16 + 8
+
+
+def test_parse_collectives_by_kind():
+    stats = counters.parse_collectives(SYNTHETIC_HLO)
+    f32_row = 128 * 256 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 64 * 64 * 2
+    assert stats.bytes_by_kind["reduce-scatter"] == f32_row
+    assert stats.bytes_by_kind["all-to-all"] == f32_row
+    assert stats.bytes_by_kind["collective-permute"] == f32_row
+    # all-gather counted once per op (sync + async-start), operand-sized
+    assert stats.count_by_kind["all-gather"] == 2
+    assert stats.total_count == 6
+    assert stats.total_bytes > 0
+
+
+def test_parse_collectives_ignores_non_collectives():
+    stats = counters.parse_collectives("%dot = f32[4,4] dot(f32[4,4] %a, f32[4,4] %b)")
+    assert stats.total_count == 0
+
+
+def test_parse_mxu_flops_dot():
+    flops = counters.parse_mxu_flops(SYNTHETIC_HLO)
+    # dot: out 128x64, contracted k=256 -> 2*128*64*256
+    assert flops == 2 * 128 * 64 * 256
+
+
+def test_events_from_real_compiled_module():
+    """End-to-end on a real XLA:CPU artifact: flops/bytes populated, dot
+    census counted; no collectives on a single device."""
+
+    def f(a, b):
+        return jnp.tanh(a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    compiled = jax.jit(f).lower(a, b).compile()
+    ev = counters.events_from_compiled(compiled, n_devices=1)
+    assert ev.flops >= 2 * 256 * 512 * 128 * 0.9
+    assert ev.bytes_accessed >= (256 * 512 + 512 * 128) * 4
+    assert ev.collective_bytes == 0
+    assert ev.census.get("dot", 0) + ev.census.get("fusion", 0) >= 1
+
+
+def test_vectorizable_fraction():
+    ev = counters.Events()
+    ev.flops = 100.0
+    ev.mxu_flops = 80.0
+    assert ev.mxu_fraction == pytest.approx(0.8)
+    assert ev.vectorizable_fraction == 1.0  # no serial (fft/sort) flops
+    ev.nonvec_flops = 25.0
+    assert ev.vectorizable_fraction == pytest.approx(0.75)
+    ev.nonvec_flops = 200.0  # overshoot clamps at 0
+    assert ev.vectorizable_fraction == 0.0
+
+
+def test_events_global_normalization():
+    """cost_analysis is per-device; Events must be global (x n_devices)."""
+
+    def f(a):
+        return a * 2.0
+
+    a = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    compiled = jax.jit(f).lower(a).compile()
+    ev1 = counters.events_from_compiled(compiled, n_devices=1)
+    ev4 = counters.events_from_compiled(compiled, n_devices=4)
+    assert ev4.bytes_accessed == pytest.approx(4 * ev1.bytes_accessed)
+
+
+def test_operand_region_nested_parens():
+    line = "%x = f32[8]{0} all-reduce(f32[8]{0} add(f32[8] %a, f32[8] %b)), to_apply=%s"
+    m = counters._COLLECTIVE_RE.search(line)
+    region = counters._operand_region(line, m.end() - 1)
+    assert "f32[8]" in region
+    stats = counters.parse_collectives(line)
+    assert stats.count_by_kind["all-reduce"] == 1

@@ -1,0 +1,165 @@
+"""Data-pipeline determinism (hypothesis) + sharding-rule properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.data import pipeline
+from repro.distributed import sharding
+from repro.train import steps as steps_mod
+
+SMOKE = ShapeConfig("smoke", 16, 4, "train")
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 100))
+def test_batch_is_pure_function_of_seed_and_step(step, seed):
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    dc = pipeline.DataConfig(seed=seed)
+    b1 = pipeline.global_batch(cfg, SMOKE, dc, step)
+    b2 = pipeline.global_batch(cfg, SMOKE, dc, step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+
+
+def test_different_steps_differ():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    dc = pipeline.DataConfig(seed=0)
+    b1 = pipeline.global_batch(cfg, SMOKE, dc, 0)
+    b2 = pipeline.global_batch(cfg, SMOKE, dc, 1)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_tokens_in_vocab_and_labels_shifted():
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    b = pipeline.global_batch(cfg, SMOKE, pipeline.DataConfig(), 3)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+    # labels are next-token-shifted views of one stream
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(nproc=st.sampled_from([1, 2, 4]))
+def test_host_slices_tile_the_global_batch(nproc):
+    cfg = configs.get_smoke_config("qwen3-1.7b")
+    dc = pipeline.DataConfig(seed=1)
+    full = pipeline.global_batch(cfg, SMOKE, dc, 5)
+    parts = []
+    for p in range(nproc):
+        sl = pipeline.host_slice_for(p, nproc, SMOKE.global_batch)
+        parts.append(pipeline.global_batch(cfg, SMOKE, dc, 5, host_slice=sl)["tokens"])
+    np.testing.assert_array_equal(np.concatenate(parts, 0), full["tokens"])
+
+
+def test_modality_stubs_match_input_specs():
+    for arch in ("whisper-large-v3", "internvl2-76b"):
+        cfg = configs.get_smoke_config(arch)
+        b = pipeline.global_batch(cfg, SMOKE, pipeline.DataConfig(), 0)
+        specs = configs.input_specs(cfg, SMOKE)
+        assert set(b) == set(specs), arch
+        for k in b:
+            assert tuple(b[k].shape) == tuple(specs[k].shape), (arch, k)
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_param_rules_roles(mesh11):
+    mesh = mesh11
+    assert sharding.spec_for_path("blocks/slot0/attn/wq/w", (64, 128), mesh) == P(None, "model")
+    assert sharding.spec_for_path("blocks/slot0/attn/wo/w", (128, 64), mesh) == P("model", None)
+    assert sharding.spec_for_path("embed/embedding", (512, 64), mesh) == P("model", None)
+    assert sharding.spec_for_path("blocks/slot0/moe/wi_gate", (8, 64, 32), mesh) == P("model", None, None)
+    assert sharding.spec_for_path("blocks/slot0/ffn/wi_gate", (64, 128), mesh) == P(None, "model")
+    assert sharding.spec_for_path("blocks/slot0/ffn/wo", (128, 64), mesh) == P("model", None)
+    assert sharding.spec_for_path("blocks/slot0/norm1/scale", (64,), mesh) == P(None)
+    # stacked leading (scan) axis is never sharded
+    assert sharding.spec_for_path("blocks/slot0/attn/wq/w", (9, 64, 128), mesh) == P(None, None, "model")
+
+
+def test_divisibility_fallback():
+    """A dim not divisible by the axis size falls back, never errors.
+    Uses an AbstractMesh so a 16-way axis exists without 16 devices."""
+    from jax.sharding import AbstractMesh
+
+    amesh = AbstractMesh((16, 16), ("data", "model"))
+    spec = sharding.spec_for_path("blocks/slot0/attn/wq/w", (64, 100), amesh)
+    assert spec == P(None, None)  # 100 % 16 != 0 -> replicate
+    spec2 = sharding.spec_for_path("blocks/slot0/attn/wq/w", (64, 128), amesh)
+    assert spec2 == P(None, "model")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d0=st.integers(1, 300),
+    d1=st.integers(1, 300),
+    path=st.sampled_from([
+        "attn/wq/w", "attn/wo/w", "embed/embedding", "ffn/wi_gate",
+        "moe/router", "norm1/scale", "mystery/leaf",
+    ]),
+)
+def test_specs_always_divisible(d0, d1, path):
+    """Property: whatever the shape, the chosen spec's axes divide the dims."""
+    from jax.sharding import AbstractMesh
+
+    amesh = AbstractMesh((4, 8), ("data", "model"))
+    spec = sharding.spec_for_path(path, (d0, d1), amesh)
+    for dim, axes in zip((d0, d1), spec):
+        if axes is None:
+            continue
+        names = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([dict(zip(amesh.axis_names, amesh.axis_sizes))[n] for n in names]))
+        assert dim % size == 0
+
+
+def test_zero_extends_first_free_dim():
+    from jax.sharding import AbstractMesh
+
+    amesh = AbstractMesh((4, 8), ("data", "model"))
+    # param spec shards dim1 over model; ZeRO should add data on dim0
+    z = sharding.zero_shard_spec(P(None, "model"), (16, 64), amesh)
+    assert z == P("data", "model")
+    # dim0 not divisible -> tries dim1 (taken) -> stays
+    z2 = sharding.zero_shard_spec(P(None, "model"), (15, 64), amesh)
+    assert z2 == P(None, "model")
+
+
+def test_batch_spec_falls_back_to_seq(mesh11):
+    from jax.sharding import AbstractMesh
+
+    amesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    # batch 1 (long_500k): dim0 can't shard over 32 data ways
+    spec = sharding.batch_spec(amesh, 1, 3, seq_axis=1, seq_len=524288)
+    assert spec[0] is None and spec[1] == ("pod", "data")
+
+
+def test_input_shardings_cover_all_cells():
+    """Every (arch x shape) cell gets a full sharding pytree with no error."""
+    from jax.sharding import AbstractMesh
+
+    amesh = AbstractMesh((16, 16), ("data", "model"))
+    for arch in configs.ASSIGNED_ARCHS:
+        cfg = configs.get_config(arch)
+        for s in SHAPES.values():
+            if not configs.shape_applicable(cfg, s):
+                continue
+            specs = configs.input_specs(cfg, s)
+            sh = sharding.input_shardings(specs, amesh, batch=s.global_batch)
+            assert jax.tree.structure(sh) == jax.tree.structure(specs)

@@ -1,0 +1,119 @@
+"""Mesh-plan context + optimized distribution paths (shard_map EP MoE,
+sequence-parallel constraints): numerics must be identical to the plain path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as configs
+from repro.configs.base import ShapeConfig
+from repro.data import pipeline
+from repro.distributed import context as mesh_ctx
+from repro.models import moe
+from repro.optim import adamw
+from repro.train import steps as steps_mod
+
+SMOKE = ShapeConfig("smoke", 32, 2, "train")
+
+
+def test_default_plan_is_inactive():
+    plan = mesh_ctx.current()
+    assert not plan.active
+    assert plan.moe_impl == "global"
+    # shard_seq is a no-op without a plan
+    x = jnp.ones((2, 8, 4))
+    assert mesh_ctx.shard_seq(x, plan) is x
+
+
+def test_use_plan_scopes_correctly():
+    plan = mesh_ctx.MeshPlan(n_data=4, data_axes=("data",), model_axis="model")
+    with mesh_ctx.use_plan(plan):
+        assert mesh_ctx.current().n_data == 4
+    assert mesh_ctx.current().n_data == 1
+
+
+def test_plan_for_mesh_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = mesh_ctx.plan_for_mesh(mesh, seq_parallel=True, moe_impl="shard_map")
+    assert plan.data_axes == ("data",)
+    assert plan.model_axis == "model"
+    assert plan.seq_parallel and plan.moe_impl == "shard_map"
+    assert plan.mesh is mesh
+
+
+def _moe_setup():
+    cfg = configs.get_smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0)
+    )
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model), jnp.float32)
+    return cfg, params, x
+
+
+def test_shard_map_moe_matches_global():
+    cfg, params, x = _moe_setup()
+    y_ref, aux_ref = moe.moe_ffn(params, cfg, x)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = mesh_ctx.plan_for_mesh(mesh, moe_impl="shard_map")
+    with mesh_ctx.use_plan(plan), mesh:
+        y_sm, aux_sm = jax.jit(lambda p, x: moe.moe_ffn(p, cfg, x))(params, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sm),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_ref), float(aux_sm), rtol=1e-4)
+
+
+def test_hierarchical_moe_matches_global():
+    cfg, params, x = _moe_setup()
+    y_ref, _ = moe.moe_ffn(params, cfg, x)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = mesh_ctx.plan_for_mesh(mesh, moe_impl="hierarchical")
+    with mesh_ctx.use_plan(plan), mesh:
+        y_h, _ = jax.jit(lambda p, x: moe.moe_ffn(p, cfg, x))(params, x)
+    # n_data == 1 -> falls back to global; just assert identical
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_shard_map_moe_gradients_flow():
+    cfg, params, x = _moe_setup()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = mesh_ctx.plan_for_mesh(mesh, moe_impl="shard_map")
+
+    def loss(p):
+        y, aux = moe.moe_ffn(p, cfg, x)
+        return jnp.sum(jnp.square(y)) + aux
+
+    with mesh_ctx.use_plan(plan), mesh:
+        g = jax.jit(jax.grad(loss))(params)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert np.all(np.isfinite(np.asarray(leaf))), path
+    assert float(jnp.max(jnp.abs(g["wi_gate"]))) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-moe-16b"])
+def test_train_step_under_optimized_plan_matches_plain(arch):
+    """The optimized plan (SP constraints / shard_map EP) must not change
+    the loss value — distribution is semantics-preserving."""
+    cfg = configs.get_smoke_config(arch)
+    run = steps_mod.RunConfig(remat="none", zero=False)
+    params = steps_mod.init_model(jax.random.PRNGKey(0), cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             pipeline.global_batch(cfg, SMOKE, pipeline.DataConfig(), 0).items()}
+
+    loss_plain, _ = steps_mod.loss_fn(params, cfg, batch, run)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = mesh_ctx.plan_for_mesh(
+        mesh, seq_parallel=(cfg.moe is None), moe_impl="shard_map"
+    )
+    with mesh_ctx.use_plan(plan), mesh:
+        loss_opt, _ = jax.jit(
+            lambda p, b: steps_mod.loss_fn(p, cfg, b, run)
+        )(params, batch)
+    np.testing.assert_allclose(float(loss_plain), float(loss_opt),
+                               rtol=2e-4, atol=1e-5)

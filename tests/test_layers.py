@@ -1,0 +1,122 @@
+"""Layer-level unit + hypothesis property tests (norms, RoPE, FFN, embed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers
+
+_dims = st.sampled_from([4, 8, 16, 32, 64])
+_seeds = st.integers(0, 2**31 - 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=_dims, seed=_seeds)
+def test_rms_norm_unit_rms(d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d), jnp.float32) * 7.0
+    y = layers.rms_norm({"scale": jnp.ones((d,))}, x, eps=1e-6)
+    rms = np.sqrt(np.mean(np.square(np.asarray(y)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=_dims, seed=_seeds)
+def test_layer_norm_zero_mean_unit_var(d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d), jnp.float32) * 5 + 2
+    y = np.asarray(layers.layer_norm({}, x, eps=1e-6))
+    np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(y.var(-1), 1.0, rtol=5e-3)
+
+
+def test_nonparam_layer_norm_has_no_params():
+    import repro.configs as configs
+
+    cfg = configs.get_config("olmo-1b")
+    assert cfg.nonparam_ln
+    init_fn, apply_fn = layers.make_norm(cfg)
+    assert init_fn(jnp.float32) == {}
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, cfg.d_model), jnp.float32)
+    y = apply_fn({}, x)
+    assert y.shape == x.shape
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=_seeds)
+def test_rope_preserves_norm(seed):
+    """Rotations preserve the L2 norm of every (x1,x2) pair."""
+    B, S, H, D = 2, 8, 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, D), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    cos, sin = layers.rope_cos_sin(pos, D, 10000.0)
+    y = layers.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_position_property():
+    """<rope(q,m), rope(k,n)> depends only on (m - n)."""
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D), jnp.float32)
+
+    def dot_at(m, n):
+        pm = jnp.asarray([[m]], jnp.int32)
+        pn = jnp.asarray([[n]], jnp.int32)
+        cm, sm = layers.rope_cos_sin(pm, D, 10000.0)
+        cn, sn = layers.rope_cos_sin(pn, D, 10000.0)
+        qr = layers.apply_rope(q, cm, sm)
+        kr = layers.apply_rope(k, cn, sn)
+        return float(jnp.sum(qr * kr))
+
+    np.testing.assert_allclose(dot_at(5, 3), dot_at(12, 10), rtol=1e-5)
+    np.testing.assert_allclose(dot_at(0, 0), dot_at(9, 9), rtol=1e-5)
+    assert abs(dot_at(5, 3) - dot_at(5, 0)) > 1e-6  # actually position-dependent
+
+
+def test_rope_position_zero_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 2, 8), jnp.float32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+    cos, sin = layers.rope_cos_sin(pos, 8, 10000.0)
+    y = layers.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_swiglu_shapes_and_grad():
+    p = layers.swiglu_init(jax.random.PRNGKey(0), 16, 32, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16), jnp.float32)
+    y = layers.swiglu(p, x)
+    assert y.shape == (2, 5, 16)
+    g = jax.grad(lambda p: jnp.sum(layers.swiglu(p, x) ** 2))(p)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in jax.tree.leaves(g))
+
+
+def test_embed_unembed_tied_consistency():
+    p = layers.embed_init(jax.random.PRNGKey(0), 32, 8, jnp.float32)
+    tok = jnp.asarray([[0, 5, 31]])
+    x = layers.embed(p, tok)
+    assert x.shape == (1, 3, 8)
+    logits = layers.unembed(p, x)
+    assert logits.shape == (1, 3, 32)
+    assert logits.dtype == jnp.float32
+    # the gold token should score its own embedding's squared norm
+    np.testing.assert_allclose(
+        float(logits[0, 1, 5]),
+        float(jnp.sum(p["embedding"][5] ** 2)),
+        rtol=1e-5,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d_in=_dims, d_out=_dims, bias=st.booleans(), seed=_seeds
+)
+def test_dense_bias_and_shapes(d_in, d_out, bias, seed):
+    p = layers.dense_init(jax.random.PRNGKey(seed), d_in, d_out, jnp.float32, bias=bias)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (3, d_in), jnp.float32)
+    y = layers.dense(p, x)
+    assert y.shape == (3, d_out)
+    assert ("b" in p) == bias

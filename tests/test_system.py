@@ -1,0 +1,116 @@
+"""System-level behaviour: cell construction, AOT lowering on the host mesh,
+artifact analysis, the profiler API, and cell applicability rules."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core.profiler import Profiler, time_fn
+from repro.launch import cells as cells_mod
+from repro.launch.mesh import make_host_mesh
+from repro.train import steps as steps_mod
+
+
+def test_cell_matrix_applicability():
+    cells = configs.cells()
+    names = {(a, s) for a, s in cells}
+    # long_500k only for sub-quadratic archs
+    assert ("mamba2-370m", "long_500k") in names
+    assert ("jamba-1.5-large-398b", "long_500k") in names
+    assert ("qwen3-32b", "long_500k") not in names
+    assert ("whisper-large-v3", "long_500k") not in names
+    # every arch has the other three shapes
+    for a in configs.ASSIGNED_ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert (a, s) in names
+    assert len(cells) == 10 * 3 + 2
+
+
+def test_input_specs_are_abstract():
+    cfg = configs.get_config("qwen3-32b")
+    specs = configs.input_specs(cfg, SHAPES["decode_32k"])
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_inapplicable_cell_raises():
+    cfg = configs.get_config("qwen3-32b")
+    with pytest.raises(ValueError):
+        configs.input_specs(cfg, SHAPES["long_500k"])
+
+
+@pytest.mark.parametrize(
+    "shape_name,kind", [("train_4k", "train"), ("prefill_32k", "prefill"),
+                        ("decode_32k", "decode")]
+)
+def test_build_and_lower_smoke_cell_on_host_mesh(shape_name, kind, monkeypatch):
+    """The full build→lower→compile→analyze path, shrunk to the host mesh and
+    a smoke config (structurally identical to the 512-device dry-run)."""
+    mesh = make_host_mesh()
+    arch = "qwen3-1.7b"
+    smoke_cfg = configs.get_smoke_config(arch)
+    small = ShapeConfig(shape_name, 32, 2, kind)
+    monkeypatch.setitem(cells_mod.SHAPES, shape_name, small)
+    monkeypatch.setattr(cells_mod.configs, "get_config", lambda a: smoke_cfg)
+    cell = cells_mod.build_cell(arch, shape_name, mesh)
+    lowered, compiled = cells_mod.lower_cell(cell, mesh)
+    result = cells_mod.analyze_cell(cell, mesh, compiled)
+    rl = result["roofline"]
+    assert rl["flops"] > 0
+    assert rl["hbm_bytes"] > 0
+    assert rl["dominant"] in ("compute", "memory", "collective")
+    assert result["memory_per_device"]["total_gb"] >= 0
+    assert result["events"]["n_devices"] == mesh.size
+    assert cell.model_flops > 0
+
+
+def test_run_config_baseline_vs_optimized():
+    shape = SHAPES["train_4k"]
+    base = cells_mod.run_config_for("qwen3-32b", shape, baseline=True)
+    opt = cells_mod.run_config_for("qwen3-32b", shape, baseline=False)
+    assert not base.zero and opt.zero
+    big = cells_mod.run_config_for("jamba-1.5-large-398b", shape)
+    assert big.opt.state_dtype == "bfloat16" and not big.opt.master_weights
+
+
+def test_profiler_api_roundtrip():
+    from repro.core.counters import events_from_analytic
+
+    prof = Profiler()
+    prof.configure_measure()
+    prof.start_measure()
+    _ = float(jnp.sum(jnp.ones((256, 256)) @ jnp.ones((256, 256))))
+    prof.stop_measure()
+    ev = events_from_analytic(flops=2 * 256**3, hbm_bytes=3 * 256 * 256 * 4)
+    m = prof.record("gemm-roi", ev)
+    assert m.wall_s > 0
+    out = prof.print_results()
+    assert "gemm-roi" in out and "VFP_SPEC" in out
+
+
+def test_profiler_event_group_limit():
+    with pytest.raises(ValueError):
+        Profiler(events=tuple(f"E{i}" for i in range(7)))
+
+
+def test_time_fn_meets_paper_methodology():
+    calls = []
+
+    def f(x):
+        calls.append(1)
+        return x * 2
+
+    t = time_fn(f, jnp.ones(16), repeats=5, min_time_s=0.0)
+    assert t >= 0
+    assert len(calls) >= 6  # warmup + 5 repeats
+
+
+def test_make_host_mesh_axes():
+    mesh = make_host_mesh()
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.size == len(jax.devices())

@@ -1,13 +1,18 @@
 """The paper's 13-application benchmark suite (Table 2), JAX/TPU-native.
 
-Each app provides:
+Each app is a :class:`repro.analysis.workload.Workload` (thin ``App``
+subclass keeping the paper's "Kernels" column) providing:
+
   * a jitted callable + inputs (sized to run in this CPU container;
     ``full_problem`` records the paper's original problem size),
   * analytic roofline terms (flops / bytes / gather bytes),
   * an instruction model (scalar vs vector issues -> R_ins), and
   * the dominant ELEN (fp64 stand-ins are fp32 on TPU; noted per app).
 
-The suite feeds every figure/table benchmark: Fig. 3 (R_ins + speedup),
+All 13 apps register in the global workload registry as ``app/<name>``
+(lazily — nothing is built until requested), so the whole suite is
+reachable through ``repro.analysis.analyze`` / ``analyze_sweep``.  The
+suite feeds every figure/table benchmark: Fig. 3 (R_ins + speedup),
 Fig. 4 (thread/chip scaling), Fig. 5 (QC sensitivity), Fig. 6 (synthetic
 SpMV), Fig. 7 (roofline placement), Table 3 (decision tree).
 """
@@ -16,63 +21,32 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hw, metrics
-from repro.core.counters import Events, events_from_compiled
-from repro.kernels.gemm import ref as gemm_ref
-from repro.kernels.jacobi2d import ops as jacobi_ops, ref as jacobi_ref
+from repro.analysis.workload import Workload, register_lazy
 from repro.kernels.qc_gate import ops as qc_ops, ref as qc_ref
+from repro.kernels.gemm import ref as gemm_ref
+from repro.kernels.jacobi2d import ref as jacobi_ref
 from repro.kernels.spmv import ops as spmv_ops, ref as spmv_ref
 from repro.kernels.stream import ref as stream_ref
 
 
 @dataclasses.dataclass
-class App:
-    name: str
-    dtype: str                      # dominant ELEN (paper semantics)
-    kernels: str                    # the paper's "Kernels" column
-    problem: str                    # reduced problem run here
-    full_problem: str               # the paper's problem size
-    fn: Callable                    # jitted; fn(*args) -> array(s)
-    args: Tuple[Any, ...]
-    flops: float                    # analytic, for the reduced problem
-    hbm_bytes: float
-    gather_bytes: float = 0.0
-    vectorizable_fraction: float = 1.0
-    notes: str = ""
+class App(Workload):
+    """A paper-suite application: a Workload + the paper's Kernels column.
 
-    @property
-    def ai(self) -> float:
-        return self.flops / max(self.hbm_bytes, 1e-30)
+    The analytic-model fields (``flops`` / ``hbm_bytes`` / ``gather_bytes``
+    / ``vectorizable_fraction``) and the ``issue_model`` / ``report``
+    methods now live on :class:`Workload`; ``App`` only adds Table-2
+    bookkeeping and survives as a deprecation-friendly alias for callers
+    that still construct apps directly.
+    """
 
-    def issue_model(self, chip: hw.ChipSpec = hw.GRACE_CORE) -> Dict[str, float]:
-        """Scalar vs vector issue counts at this app's ELEN (paper Eq. 1)."""
-        elements = self.flops / 2.0  # FMA-equivalent elements
-        vec = metrics.vector_issues(elements, self.dtype, chip)
-        scalar = metrics.scalar_issues(elements)
-        r_full = metrics.instruction_reduction(scalar, max(vec, 1.0))
-        # Amdahl over the vectorizable fraction (paper Sec. 4.1)
-        vb = metrics.vectorization_bound(chip, self.dtype)
-        r_eff = metrics.amdahl_r_ins(vb, self.vectorizable_fraction)
-        return {"scalar": scalar, "vector": vec, "r_ins": r_eff, "vb": vb}
-
-    def report(self, chip: hw.ChipSpec = hw.GRACE_CORE) -> metrics.VectorizationReport:
-        ins = self.issue_model(chip)
-        return metrics.VectorizationReport(
-            name=self.name,
-            dtype=self.dtype,
-            flops=self.flops,
-            hbm_bytes=self.hbm_bytes,
-            gather_bytes=self.gather_bytes,
-            ins_scalar=ins["scalar"],
-            ins_vec=ins["scalar"] / ins["r_ins"],
-            vectorizable_fraction=self.vectorizable_fraction,
-        )
+    kernels: str = ""  # the paper's "Kernels" column
 
 
 # ---------------------------------------------------------------------------
@@ -334,17 +308,36 @@ def suite() -> Dict[str, App]:
     return {a.name: a for a in apps}
 
 
+#: Table-2 app names, in suite order (static so registration needs no build).
+APP_NAMES = (
+    "LLM-training", "LLM-inference", "QC-simulator", "FFT1D", "FFT2D",
+    "STREAM", "DGEMM", "SGEMM", "SpMV", "Jacobi2D", "YOLOv3", "AlexNet",
+    "AutoDock",
+)
+
+def register_app_workloads() -> None:
+    """(Re-)register the 13 apps; idempotent discovery hook (also re-run by
+    repro.analysis after clear_registry, when import side effects can't)."""
+    for _n in APP_NAMES:
+        register_lazy(f"app/{_n}", lambda _n=_n: suite()[_n], tags=("app",),
+                      replace=True)
+
+
+register_app_workloads()
+
+
 def measure(app: App, repeats: int = 5, min_time_s: float = 0.05) -> float:
     """Paper methodology: warmup, >=5 repeats, >=min runtime; best-of."""
     import time
 
-    out = app.fn(*app.args)
+    args = app.example_args()
+    out = app.fn(*args)
     jax.block_until_ready(out)
     times = []
     total, i = 0.0, 0
     while i < repeats or total < min_time_s:
         t0 = time.perf_counter()
-        out = app.fn(*app.args)
+        out = app.fn(*args)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         times.append(dt)

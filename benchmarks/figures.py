@@ -234,6 +234,14 @@ def dryrun_roofline(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
     return rows
 
 
+def sve_analysis_sweep() -> List[Dict]:
+    """Every registered workload (6 kernels + 13 apps) through the one-call
+    pipeline on both chip models — the unified-API view of Table 3/Fig. 7."""
+    from repro.analysis import analyze_sweep
+
+    return [r.row() for r in analyze_sweep(chips=(hw.GRACE_CORE, hw.TPU_V5E))]
+
+
 ALL = {
     "fig3_vectorization": fig3_vectorization,
     "fig4_thread_scaling": fig4_thread_scaling,
@@ -241,5 +249,6 @@ ALL = {
     "fig6_synthetic_spmv": fig6_synthetic_spmv,
     "fig7_roofline": fig7_roofline,
     "table3_decision_tree": table3_decision_tree,
+    "sve_analysis_sweep": sve_analysis_sweep,
     "dryrun_roofline": dryrun_roofline,
 }

@@ -3,8 +3,11 @@
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig3_vectorization]
     PYTHONPATH=src python -m benchmarks.run --out experiments/bench
+    PYTHONPATH=src python -m benchmarks.run --list
 
-Writes one CSV per benchmark and prints each table.
+Writes one CSV per benchmark and prints each table.  ``--list`` enumerates
+both the figure/table benchmarks and every workload registered in the
+unified ``repro.analysis`` registry.
 """
 
 from __future__ import annotations
@@ -42,13 +45,36 @@ def _print_table(name: str, rows) -> None:
         print("  ".join(str(r.get(k, "")).ljust(widths[k]) for k in keys))
 
 
+def _list() -> int:
+    from benchmarks.figures import ALL
+    from repro.analysis import list_workloads
+
+    print("benchmarks (python -m benchmarks.run --only <name>):")
+    for name in ALL:
+        print(f"  {name}")
+    print("\nworkloads (repro.analysis.analyze(<name>)):")
+    for name in list_workloads():
+        print(f"  {name}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmarks + registered workloads and exit")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args(argv)
 
+    if args.list:
+        return _list()
+
     from benchmarks.figures import ALL
+
+    if args.only is not None and args.only not in ALL:
+        print(f"error: unknown benchmark {args.only!r}; available: "
+              f"{', '.join(ALL)}", file=sys.stderr)
+        return 2
 
     os.makedirs(args.out, exist_ok=True)
     todo = {args.only: ALL[args.only]} if args.only else ALL

@@ -1,6 +1,10 @@
 """Quickstart: build a model, take a train step, and run the paper's
 vectorization analysis on the compiled step — the 60-second tour.
 
+The analysis is ONE call now: wrap the step in a ``Workload`` and
+``analyze`` it; counters -> Eq. 1 metrics -> adapted roofline (Eq. 2) ->
+Fig. 8 decision tree all run inside the pipeline.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -8,12 +12,9 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
+from repro.analysis import Workload, analyze
 from repro.configs.base import ShapeConfig
 from repro.core import hw
-from repro.core.counters import events_from_compiled
-from repro.core.decision_tree import classify
-from repro.core.metrics import VectorizationReport, vectorization_bound
-from repro.core.roofline import adapted_roofline
 from repro.data import pipeline
 from repro.optim import adamw
 from repro.train import steps as steps_mod
@@ -36,30 +37,23 @@ def main():
     print(f"step 0: loss={float(metrics['loss']):.4f} "
           f"grad_norm={float(metrics['grad_norm']):.3f}")
 
-    # 3. the paper's analysis, applied to the compiled step artifact
-    compiled = train_step.lower(params, opt, batch).compile()
-    ev = events_from_compiled(compiled, n_devices=1)
+    # 3. the paper's analysis, in one call on the TPU target model
+    wl = Workload(name="train_step", fn=train_step, args=(params, opt, batch),
+                  dtype="bf16")
+    result = analyze(wl, chip=hw.TPU_V5E)
+
+    ev = result.events
     print(f"\ncompiled-step events (while-aware structural model):")
     print(f"  flops={ev.flops:.3e}  mxu_share={ev.vectorizable_fraction:.2%}  "
           f"hlo_traffic={ev.bytes_accessed:.3e}B")
-
-    chip = hw.TPU_V5E
-    rl = adapted_roofline(chip, "bf16")
-    print(f"\nadapted roofline on {chip.name} (paper Eq. 2):")
-    print(f"  VB={vectorization_bound(chip, 'bf16'):.0f}  "
-          f"AI_IRR={rl.ai_irr:.1f}  AI_IRV={rl.ai_irv:.1f} flop/B")
-
-    report = VectorizationReport(
-        name="train_step", dtype="bf16",
-        flops=ev.flops, hbm_bytes=ev.bytes_accessed,
-        gather_bytes=ev.gather_bytes,
-        ins_scalar=ev.flops / 2, ins_vec=ev.flops / 2 / rl.vb,
-        vectorizable_fraction=ev.vectorizable_fraction,
-    )
-    decision = classify(report, chip)
-    print(f"\ndecision tree (paper Fig. 8): Class {int(decision.perf_class)} "
-          f"— {decision.perf_class.describe()}")
-    print(f"  {decision.rationale}")
+    rl = result.roofline
+    print(f"\nadapted roofline on {result.chip} (paper Eq. 2):")
+    print(f"  VB={result.vb:.0f}  AI_IRR={rl.ai_irr:.1f}  "
+          f"AI_IRV={rl.ai_irv:.1f} flop/B  AI={result.ai:.3g} ({result.bound})")
+    print(f"\ndecision tree (paper Fig. 8): Class {int(result.perf_class)} "
+          f"— {result.perf_class.describe()}")
+    print(f"  {result.decision.rationale}")
+    print("\n" + result.table())
 
 
 if __name__ == "__main__":

@@ -3,32 +3,27 @@ JAX function and get the full SVE-style vectorization report — validated
 counters, VB / R_ins, adapted roofline placement, and the Fig. 8 decision
 tree — for both the Grace-class CPU model and the TPU target.
 
+All wiring now goes through the unified API: wrap the function in a
+``Workload`` and call ``analyze`` (or sweep chips with ``analyze_sweep``,
+which compiles each workload exactly once).
+
     PYTHONPATH=src python examples/vectorization_report.py
 """
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import ArtifactCache, Workload, analyze_sweep, format_table
 from repro.core import hw
-from repro.core.counters import events_from_compiled
-from repro.core.decision_tree import classify
-from repro.core.metrics import VectorizationReport
-from repro.core.profiler import Profiler
-from repro.core.roofline import adapted_roofline
+
+CHIPS = (hw.GRACE_CORE, hw.TPU_V5E)
 
 
-def analyze(name, fn, args, dtype="fp32", chips=(hw.GRACE_CORE, hw.TPU_V5E)):
-    """Compile fn, extract artifact events, classify on each chip model."""
-    compiled = jax.jit(fn).lower(*args).compile()
-    ev = events_from_compiled(compiled, n_devices=1)
-
-    prof = Profiler()
-    prof.configure_measure()
-    prof.start_measure()
-    jax.block_until_ready(jax.jit(fn)(*args))
-    prof.stop_measure()
-    prof.record(name, ev)
-
+def report(name, fn, args, dtype="fp32", cache=None):
+    """One call: compile once, analyze on every chip model."""
+    wl = Workload(name=name, fn=fn, args=args, dtype=dtype)
+    results = analyze_sweep([wl], chips=CHIPS, cache=cache)
+    ev = results[0].events
     print(f"\n### {name}")
     print(f"  flops={ev.flops:.3e}  traffic={ev.bytes_accessed:.3e}B  "
           f"gather={ev.gather_bytes:.3e}B  vec_frac={ev.vectorizable_fraction:.2%} "
@@ -36,35 +31,25 @@ def analyze(name, fn, args, dtype="fp32", chips=(hw.GRACE_CORE, hw.TPU_V5E)):
     print(f"  counter validation: structural flops {ev.flops:.3e} vs "
           f"raw cost_analysis {ev.xla_raw_flops:.3e} "
           f"(scan trip counts: {ev.while_trip_counts or 'none'})")
-    for chip in chips:
-        rl = adapted_roofline(chip, dtype)
-        rep = VectorizationReport(
-            name=name, dtype=dtype,
-            flops=ev.flops, hbm_bytes=ev.bytes_accessed,
-            gather_bytes=ev.gather_bytes,
-            ins_scalar=ev.flops / 2,
-            ins_vec=ev.flops / 2 / rl.vb,
-            vectorizable_fraction=ev.vectorizable_fraction,
-        )
-        d = classify(rep, chip)
-        print(f"  [{chip.name:12s}] AI={rep.ai:8.3g}  knee={rl.ai_irr:6.3g}  "
-              f"VB={rl.vb:4.0f}  Class {int(d.perf_class)} "
-              f"({d.perf_class.describe()})")
+    print(format_table(results))
+    return results
 
 
 def main():
     n = 512
     a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+    cache = ArtifactCache()
 
-    analyze("gemm-512", lambda x, y: x @ y, (a, b))
+    report("gemm-512", lambda x, y: x @ y, (a, b), cache=cache)
 
-    analyze("stream-triad", lambda x, y: x + 3.0 * y, (a, b))
+    report("stream-triad", lambda x, y: x + 3.0 * y, (a, b), cache=cache)
 
     # pointer chasing: the SpMV pattern
     idx = jax.random.randint(jax.random.PRNGKey(2), (n * n,), 0, n * n)
     flat = a.reshape(-1)
-    analyze("gather-reduce", lambda x, i: jnp.take(x, i).sum(), (flat, idx))
+    report("gather-reduce", lambda x, i: jnp.take(x, i).sum(), (flat, idx),
+           cache=cache)
 
     # scanned layers: exercises the while-aware counter path
     def scanned(x):
@@ -72,10 +57,13 @@ def main():
             return jnp.tanh(c @ c), None
         y, _ = jax.lax.scan(body, x, None, length=8)
         return y
-    analyze("scan-8-layers", scanned, (a,))
+    report("scan-8-layers", scanned, (a,), cache=cache)
 
     # FFT: not MXU-vectorizable (the paper's FFTW Class-1 case)
-    analyze("fft2d", lambda x, _: jnp.abs(jnp.fft.fft2(x)), (a, b))
+    report("fft2d", lambda x, _: jnp.abs(jnp.fft.fft2(x)), (a, b), cache=cache)
+
+    print(f"\n[{cache.compiles} compiles for "
+          f"{cache.compiles + cache.hits} analysis cells]")
 
 
 if __name__ == "__main__":

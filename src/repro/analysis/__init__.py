@@ -1,0 +1,38 @@
+"""Unified Workload API + one-call SVE analysis pipeline.
+
+The paper's end-to-end method — PMU events -> Eq. 1 metrics (VB, R_ins) ->
+adapted roofline (Eq. 2) -> Fig. 8 decision tree — behind two entry points:
+
+* :func:`workload` / :class:`Workload` — describe a unit of work once
+  (callable + example args + dtype + optional analytic cost model) and
+  register it globally;
+* :func:`analyze` / :func:`analyze_sweep` — run the whole pipeline on any
+  registered (or ad-hoc) workload in one call, returning a typed
+  :class:`SVEAnalysis` report.
+
+    from repro.analysis import analyze, list_workloads
+
+    print(analyze("kernel/gemm").table())
+    for name in list_workloads():
+        print(analyze(name))
+"""
+
+from repro.analysis.workload import (  # noqa: F401
+    Workload,
+    clear_registry,
+    get_workload,
+    list_workloads,
+    register,
+    register_lazy,
+    workload,
+)
+from repro.analysis.pipeline import (  # noqa: F401
+    ArtifactCache,
+    DEFAULT_CACHE,
+    SVEAnalysis,
+    analyze,
+    analyze_compiled,
+    analyze_events,
+    analyze_sweep,
+    format_table,
+)

@@ -1,0 +1,370 @@
+"""One-call SVE analysis pipeline: Workload -> SVEAnalysis.
+
+``analyze(workload)`` chains the paper's whole method — PMU-analogue event
+extraction (``core.counters``), Eq. 1 metrics (VB, R_ins, AI), the adapted
+roofline (Eq. 2) and the Fig. 8 decision tree — into a single call that
+returns a typed, serializable report.  Callers never wire counters /
+metrics / roofline / decision_tree by hand again.
+
+Event sources (``source=``):
+
+* ``"analytic"`` — the workload's Sec.-3.3-style flops/bytes model;
+* ``"compiled"`` — lower + compile the workload's callable and extract
+  events from the XLA artifact (``counters.events_from_compiled``);
+* ``"auto"`` (default) — analytic when the model is present, else compiled.
+
+``analyze_sweep`` amortizes compilation: compiled artifacts are
+chip-independent (events are GLOBAL quantities), so a multi-chip /
+multi-ELEN sweep compiles each workload exactly once via ``ArtifactCache``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+from repro.core import hw, metrics
+from repro.core.counters import Events, events_from_analytic, events_from_compiled
+from repro.core.decision_tree import Decision, PerfClass, classify
+from repro.core.metrics import VectorizationReport
+from repro.core.roofline import AdaptedRoofline, adapted_roofline
+from repro.analysis.workload import Workload, get_workload, list_workloads
+
+WorkloadLike = Union[str, Workload]
+
+
+# ---------------------------------------------------------------------------
+# Compiled-artifact cache (the sweep's compile-once guarantee)
+# ---------------------------------------------------------------------------
+
+
+class ArtifactCache:
+    """Cache of per-workload compiled-artifact Events.
+
+    Events are chip-independent (global flops/bytes/collective quantities),
+    so one compile serves every (chip, dtype) cell of a sweep.  ``compiles``
+    and ``hits`` are exposed for tests and cost accounting.
+    """
+
+    def __init__(self) -> None:
+        # keyed by Workload identity, with the Workload kept alive so ids
+        # can't be recycled: two distinct workloads that happen to share a
+        # name must never read each other's events
+        self._events: Dict[int, tuple] = {}
+        self.compiles = 0
+        self.hits = 0
+
+    def events_for(self, wl: Workload) -> Events:
+        if wl.fn is None:
+            raise ValueError(f"{wl.name}: no callable to compile")
+        key = id(wl)
+        if key in self._events:
+            self.hits += 1
+            return self._events[key][1]
+        import jax
+
+        self.compiles += 1
+        compiled = jax.jit(wl.fn).lower(*wl.example_args()).compile()
+        ev = events_from_compiled(compiled, n_devices=wl.n_devices)
+        self._events[key] = (wl, ev)
+        return ev
+
+    def clear(self) -> None:
+        self._events.clear()
+        self.compiles = 0
+        self.hits = 0
+
+
+#: Module-level default cache shared by bare ``analyze`` calls.
+DEFAULT_CACHE = ArtifactCache()
+
+
+# ---------------------------------------------------------------------------
+# The typed report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SVEAnalysis:
+    """Everything the paper derives about one workload on one chip model."""
+
+    workload: str
+    chip: str
+    dtype: str
+    source: str  # "analytic" | "compiled"
+    events: Events
+    report: VectorizationReport
+    roofline: AdaptedRoofline
+    decision: Decision
+    wall_s: Optional[float] = None
+
+    # -- the paper's headline quantities, flattened -------------------------
+    @property
+    def vb(self) -> float:
+        return self.roofline.vb
+
+    @property
+    def r_ins(self) -> float:
+        return self.report.r_ins
+
+    @property
+    def ai(self) -> float:
+        return self.report.ai
+
+    @property
+    def ai_inflection(self) -> float:
+        return self.decision.ai_inflection
+
+    @property
+    def perf_class(self) -> PerfClass:
+        return self.decision.perf_class
+
+    @property
+    def bound(self) -> str:
+        """Adapted-roofline region: "memory-bound" or "compute-bound"."""
+        return self.roofline.region(self.ai)
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.roofline.predicted_speedup(self.ai)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "workload": self.workload,
+            "chip": self.chip,
+            "dtype": self.dtype,
+            "source": self.source,
+            "vb": self.vb,
+            "r_ins": self.r_ins,
+            "ai": self.ai,
+            "ai_inflection": self.ai_inflection,
+            "bound": self.bound,
+            "predicted_speedup": self.predicted_speedup,
+            "perf_class": int(self.perf_class),
+            "perf_class_name": self.perf_class.name,
+            "rationale": self.decision.rationale,
+            "gather_fraction": self.report.gather_fraction,
+            "vectorizable_fraction": self.report.vectorizable_fraction,
+            "flops": self.report.flops,
+            "hbm_bytes": self.report.hbm_bytes,
+            "wall_s": self.wall_s,
+            "events": self.events.to_dict(),
+            "roofline": dataclasses.asdict(self.roofline),
+        }
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    def row(self) -> Dict[str, Any]:
+        """One flat table row (the CSV/pretty-print projection)."""
+        return {
+            "workload": self.workload,
+            "chip": self.chip,
+            "dtype": self.dtype,
+            "vb": f"{self.vb:.0f}",
+            "r_ins": f"{self.r_ins:.3g}",
+            "ai": f"{self.ai:.4g}",
+            "knee": f"{self.ai_inflection:.4g}",
+            "bound": self.bound,
+            "class": f"{int(self.perf_class)} {self.perf_class.name}",
+            "speedup_pred": f"{self.predicted_speedup:.3g}",
+            "wall_s": "" if self.wall_s is None else f"{self.wall_s:.5f}",
+        }
+
+    def table(self) -> str:
+        return format_table([self])
+
+    def __str__(self) -> str:
+        return (
+            f"[{self.workload} @ {self.chip}/{self.dtype}] "
+            f"VB={self.vb:.0f} R_ins={self.r_ins:.3g} AI={self.ai:.4g} "
+            f"({self.bound}) Class {int(self.perf_class)} "
+            f"({self.perf_class.describe()})"
+        )
+
+
+def format_table(results: Sequence[SVEAnalysis]) -> str:
+    """Pretty fixed-width table over ``SVEAnalysis.row()`` projections."""
+    rows = [r.row() for r in results]
+    if not rows:
+        return "(no results)"
+    keys = list(rows[0].keys())
+    widths = {k: max(len(k), *(len(str(r[k])) for r in rows)) for k in keys}
+    lines = ["  ".join(k.ljust(widths[k]) for k in keys)]
+    for r in rows:
+        lines.append("  ".join(str(r[k]).ljust(widths[k]) for k in keys))
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+
+
+def _resolve(wl: WorkloadLike) -> Workload:
+    return get_workload(wl) if isinstance(wl, str) else wl
+
+
+def _report_from_events(
+    name: str, dtype: str, ev: Events, chip: hw.ChipSpec
+) -> VectorizationReport:
+    """Eq.-1 report from artifact events: scalar baseline = one element per
+    issue slot; effective R_ins = Amdahl over the vectorizable FLOP share."""
+    vb = metrics.vectorization_bound(chip, dtype)
+    r_eff = metrics.amdahl_r_ins(vb, ev.vectorizable_fraction)
+    ins_scalar = ev.flops / 2.0
+    return VectorizationReport(
+        name=name,
+        dtype=dtype,
+        flops=ev.flops,
+        hbm_bytes=ev.bytes_accessed,
+        gather_bytes=ev.gather_bytes,
+        ins_scalar=ins_scalar,
+        ins_vec=ins_scalar / max(r_eff, 1e-30),
+        vectorizable_fraction=ev.vectorizable_fraction,
+        collective_bytes=ev.collective_bytes,
+    )
+
+
+def _time_roi(wl: Workload) -> Optional[float]:
+    """ROI wall time through the paper's profiler API (Sec. 3.1)."""
+    if wl.fn is None:
+        return None
+    import jax
+
+    from repro.core.profiler import Profiler
+
+    args = wl.example_args()
+    prof = Profiler()
+    prof.configure_measure()
+    jax.block_until_ready(wl.fn(*args))  # warmup/compile outside the ROI
+    prof.start_measure()
+    jax.block_until_ready(wl.fn(*args))
+    prof.stop_measure()
+    return prof._acc / max(prof._repeats, 1)
+
+
+def analyze(
+    wl: WorkloadLike,
+    chip: hw.ChipSpec = hw.GRACE_CORE,
+    *,
+    dtype: Optional[str] = None,
+    source: str = "auto",
+    time_roi: bool = False,
+    cache: Optional[ArtifactCache] = None,
+) -> SVEAnalysis:
+    """Run the paper's full method on one workload, on one chip model.
+
+    Chains compile/lower (cached) -> event extraction -> Eq. 1 metrics ->
+    adapted roofline (Eq. 2) -> Fig. 8 decision tree, plus an optional
+    profiler-timed ROI, and returns the typed :class:`SVEAnalysis`.
+    """
+    wl = _resolve(wl)
+    dtype = dtype or wl.dtype
+    if source not in ("auto", "analytic", "compiled"):
+        raise ValueError(f"source must be auto|analytic|compiled, got {source!r}")
+    if source == "auto":
+        source = "analytic" if wl.has_analytic_model else "compiled"
+
+    if source == "analytic":
+        if not wl.has_analytic_model:
+            raise ValueError(f"{wl.name}: no analytic model for source='analytic'")
+        ev = events_from_analytic(
+            flops=wl.flops,
+            hbm_bytes=wl.hbm_bytes,
+            gather_bytes=wl.gather_bytes,
+            collective_bytes=wl.collective_bytes,
+            n_devices=wl.n_devices,
+        )
+        ev.nonvec_flops = wl.flops * (1.0 - wl.vectorizable_fraction)
+        report = wl.report(chip, dtype=dtype)
+    else:
+        ev = (cache or DEFAULT_CACHE).events_for(wl)
+        report = _report_from_events(wl.name, dtype, ev, chip)
+
+    rl = adapted_roofline(chip, dtype)
+    decision = classify(report, chip, roofline=rl)
+    wall = _time_roi(wl) if time_roi else None
+    return SVEAnalysis(
+        workload=wl.name,
+        chip=chip.name,
+        dtype=dtype,
+        source=source,
+        events=ev,
+        report=report,
+        roofline=rl,
+        decision=decision,
+        wall_s=wall,
+    )
+
+
+def analyze_events(
+    name: str,
+    events: Events,
+    chip: hw.ChipSpec = hw.GRACE_CORE,
+    *,
+    dtype: str = "fp32",
+) -> SVEAnalysis:
+    """The pipeline's tail for callers that already hold Events (e.g. the
+    dry-run, which post-processes events with its analytic traffic model)."""
+    report = _report_from_events(name, dtype, events, chip)
+    rl = adapted_roofline(chip, dtype)
+    return SVEAnalysis(
+        workload=name,
+        chip=chip.name,
+        dtype=dtype,
+        source="compiled",
+        events=events,
+        report=report,
+        roofline=rl,
+        decision=classify(report, chip, roofline=rl),
+    )
+
+
+def analyze_compiled(
+    name: str,
+    compiled: Any,
+    chip: hw.ChipSpec = hw.GRACE_CORE,
+    *,
+    dtype: str = "fp32",
+    n_devices: Optional[int] = None,
+) -> SVEAnalysis:
+    """Analyze an already-compiled ``jax.stages.Compiled`` artifact."""
+    ev = events_from_compiled(compiled, n_devices=n_devices)
+    return analyze_events(name, ev, chip, dtype=dtype)
+
+
+def analyze_sweep(
+    workloads: Optional[Iterable[WorkloadLike]] = None,
+    chips: Sequence[hw.ChipSpec] = (hw.GRACE_CORE, hw.TPU_V5E),
+    *,
+    dtypes: Optional[Sequence[str]] = None,
+    source: str = "auto",
+    time_roi: bool = False,
+    cache: Optional[ArtifactCache] = None,
+) -> List[SVEAnalysis]:
+    """``analyze`` over a (workload x chip x dtype) grid, compiling each
+    workload at most once (events are chip-independent; see ArtifactCache).
+
+    ``workloads`` defaults to every registered workload; ``dtypes`` defaults
+    to each workload's own dtype.
+    """
+    cache = cache or ArtifactCache()
+    names = list(workloads) if workloads is not None else list_workloads()
+    out: List[SVEAnalysis] = []
+    for w in names:
+        wl = _resolve(w)
+        for chip in chips:
+            for dtype in dtypes or (wl.dtype,):
+                out.append(
+                    analyze(
+                        wl,
+                        chip,
+                        dtype=dtype,
+                        source=source,
+                        time_roi=time_roi,
+                        cache=cache,
+                    )
+                )
+    return out

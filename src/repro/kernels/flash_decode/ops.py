@@ -1,14 +1,7 @@
-"""Jit wrapper for the flash-decode kernel."""
+"""Flash-decode kernel call surface (served by the kernel registry)."""
 
 from __future__ import annotations
 
-import functools
+from repro.kernels.registry import FLASH_DECODE as flash_decode
 
-import jax
-
-from repro.kernels.flash_decode.kernel import flash_decode as _fd
-
-
-@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def flash_decode(q, k, v, valid_len, *, block_s: int = 512, interpret: bool = True):
-    return _fd(q, k, v, valid_len, block_s=block_s, interpret=interpret)
+__all__ = ["flash_decode"]

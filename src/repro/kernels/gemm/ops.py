@@ -1,17 +1,11 @@
-"""Jit wrapper + VMEM-footprint model for the GEMM kernel."""
+"""GEMM kernel call surface (served by the kernel registry) + the
+VMEM-footprint tile model."""
 
 from __future__ import annotations
 
-import functools
+from repro.kernels.registry import GEMM as gemm
 
-import jax
-
-from repro.kernels.gemm.kernel import gemm as _gemm
-
-
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def gemm(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128, interpret: bool = True):
-    return _gemm(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)
+__all__ = ["gemm", "vmem_bytes", "pick_tiles"]
 
 
 def vmem_bytes(bm: int, bn: int, bk: int, in_bytes: int = 2) -> int:

@@ -1,4 +1,5 @@
-"""Jit wrapper + multi-sweep driver for the Jacobi2D kernel."""
+"""Jacobi2D kernel call surface (served by the kernel registry) + the
+multi-sweep driver."""
 
 from __future__ import annotations
 
@@ -6,12 +7,10 @@ import functools
 
 import jax
 
+from repro.kernels.registry import JACOBI_STEP as jacobi_step
 from repro.kernels.jacobi2d.kernel import jacobi_step as _step
 
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def jacobi_step(u, *, block_rows: int = 128, interpret: bool = True):
-    return _step(u, block_rows=block_rows, interpret=interpret)
+__all__ = ["jacobi_step", "jacobi"]
 
 
 @functools.partial(jax.jit, static_argnames=("sweeps", "block_rows", "interpret"))

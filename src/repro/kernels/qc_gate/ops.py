@@ -1,19 +1,13 @@
-"""Jit wrapper + circuit driver for the RX-gate kernel."""
+"""RX-gate kernel call surface (served by the kernel registry) + circuit
+drivers."""
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.qc_gate.kernel import rx_gate as _rx
+from repro.kernels.registry import RX_GATE as rx_gate
 
-
-@functools.partial(jax.jit, static_argnames=("qubit", "theta", "block_outer", "interpret"))
-def rx_gate(re, im, *, qubit: int, theta: float, block_outer: int = 256,
-            interpret: bool = True):
-    return _rx(re, im, qubit, theta, block_outer=block_outer, interpret=interpret)
+__all__ = ["rx_gate", "rx_layer", "zero_state"]
 
 
 def rx_layer(re, im, n_qubits: int, theta: float, *, interpret: bool = True):

@@ -1,0 +1,338 @@
+"""Kernel registry: one jit-wrapper factory for every Pallas kernel.
+
+Each ``kernels/<pkg>/ops.py`` used to hand-roll the same
+``functools.partial(jax.jit, static_argnames=(..., "interpret"))`` wrapper.
+:func:`register_kernel` replaces those six copies with one factory that
+returns a :class:`KernelOps` exposing the three call surfaces:
+
+* ``op(*args)``        — default call (interpret-mode Pallas, CPU-safe);
+* ``op.kernel(*args)`` — compiled Pallas path (``interpret=False``);
+* ``op.interpret(*args)`` — explicit interpret-mode path;
+* ``op.ref(*args)``    — the pure-jnp/numpy oracle.
+
+Registration also auto-registers the kernel as a :class:`~repro.analysis.
+workload.Workload` (name ``kernel/<name>``) with a small example problem
+and the ref module's analytic flops/bytes model, so every kernel is
+reachable through ``repro.analysis.analyze`` with zero extra wiring.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.analysis.workload import Workload, register_lazy
+
+
+class KernelOps:
+    """Call surface for one registered kernel (ref / kernel / interpret)."""
+
+    def __init__(
+        self,
+        name: str,
+        kernel_fn: Callable,
+        ref_fn: Optional[Callable] = None,
+        *,
+        static_argnums: Tuple[int, ...] = (),
+        static_argnames: Tuple[str, ...] = (),
+    ) -> None:
+        self.name = name
+        self.raw = kernel_fn
+        self._ref = ref_fn
+        names = tuple(static_argnames)
+        if "interpret" not in names:
+            names = names + ("interpret",)
+        self._jit = jax.jit(
+            kernel_fn, static_argnums=static_argnums or None, static_argnames=names
+        )
+        functools.update_wrapper(self, kernel_fn, updated=())
+
+    def __call__(self, *args: Any, **kw: Any):
+        kw.setdefault("interpret", True)
+        return self._jit(*args, **kw)
+
+    def kernel(self, *args: Any, **kw: Any):
+        kw["interpret"] = False
+        return self._jit(*args, **kw)
+
+    def interpret(self, *args: Any, **kw: Any):
+        kw["interpret"] = True
+        return self._jit(*args, **kw)
+
+    def ref(self, *args: Any, **kw: Any):
+        if self._ref is None:
+            raise NotImplementedError(f"kernel {self.name!r} has no ref oracle")
+        return self._ref(*args, **kw)
+
+    def __repr__(self) -> str:
+        return f"KernelOps({self.name!r})"
+
+
+KERNELS: Dict[str, KernelOps] = {}
+
+# kernel workload builders, kept so registration can be re-applied after
+# repro.analysis.clear_registry() (module import side effects only run once)
+_WORKLOAD_BUILDERS: Dict[str, Callable[[], Workload]] = {}
+
+
+def register_builtin_workloads() -> None:
+    """(Re-)register every kernel workload; idempotent discovery hook."""
+    for wl_name, builder in _WORKLOAD_BUILDERS.items():
+        register_lazy(wl_name, builder, tags=("kernel",), replace=True)
+
+
+def register_kernel(
+    name: str,
+    kernel: Optional[Callable] = None,
+    *,
+    ref: Optional[Callable] = None,
+    static_argnums: Tuple[int, ...] = (),
+    static_argnames: Tuple[str, ...] = (),
+    workload: Optional[Callable[[], Workload]] = None,
+):
+    """Register a kernel entry point; usable directly or as a decorator.
+
+    ``workload`` is a zero-arg builder returning the kernel's example
+    Workload; it is registered lazily as ``kernel/<name>`` so importing the
+    registry never constructs example arrays.
+    """
+
+    def _do(fn: Callable) -> KernelOps:
+        if name in KERNELS:
+            raise ValueError(f"kernel {name!r} already registered")
+        ops = KernelOps(
+            name,
+            fn,
+            ref,
+            static_argnums=static_argnums,
+            static_argnames=static_argnames,
+        )
+        KERNELS[name] = ops
+        if workload is not None:
+            _WORKLOAD_BUILDERS[f"kernel/{name}"] = workload
+            register_lazy(f"kernel/{name}", workload, tags=("kernel",),
+                          replace=True)
+        return ops
+
+    if kernel is not None:
+        return _do(kernel)
+    return _do
+
+
+def get_kernel(name: str) -> KernelOps:
+    if name not in KERNELS:
+        raise KeyError(f"unknown kernel {name!r}; have {sorted(KERNELS)}")
+    return KERNELS[name]
+
+
+def list_kernels() -> list:
+    return sorted(KERNELS)
+
+
+# ---------------------------------------------------------------------------
+# The six kernel packages
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_decode import kernel as _fd_k, ref as _fd_r  # noqa: E402
+from repro.kernels.gemm import kernel as _gemm_k, ref as _gemm_r  # noqa: E402
+from repro.kernels.jacobi2d import kernel as _jac_k, ref as _jac_r  # noqa: E402
+from repro.kernels.qc_gate import kernel as _qc_k, ref as _qc_r  # noqa: E402
+from repro.kernels.spmv import kernel as _spmv_k, ref as _spmv_r  # noqa: E402
+from repro.kernels.stream import kernel as _stream_k, ref as _stream_r  # noqa: E402
+
+
+def _gemm_workload() -> Workload:
+    import jax.numpy as jnp
+
+    n = 256
+    fb = _gemm_r.flops_bytes(n, n, n, 4)
+
+    def args():
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+        y = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+        return (x, y)
+
+    return Workload(
+        name="kernel/gemm", fn=GEMM, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"{n}^2", tags=("kernel",),
+        notes="MXU-tiled Pallas GEMM; compute-bound Class 4",
+    )
+
+
+def _stream_workload() -> Workload:
+    import jax.numpy as jnp
+
+    rows, cols = 2048, 128
+    fb = _stream_r.flops_bytes("triad", rows * cols, 4)
+
+    def args():
+        a = jnp.ones((rows, cols), jnp.float32)
+        b = jnp.ones((rows, cols), jnp.float32)
+        return (a, b, 3.0)
+
+    return Workload(
+        name="kernel/stream-triad", fn=STREAM_TRIAD, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"{rows}x{cols}", tags=("kernel",),
+        notes="McCalpin triad; streaming memory-bandwidth-bound Class 2",
+    )
+
+
+def _spmv_workload() -> Workload:
+    import numpy as np
+
+    n = 512
+
+    def args():
+        vals, cols, nnz = _spmv_r.make_problem(
+            jax.random.PRNGKey(0), n, n, row_block=8, max_nnz=64, width_pad=128
+        )
+        x = jax.random.normal(jax.random.PRNGKey(1), (n,), vals.dtype)
+        return (vals, cols, nnz, x)
+
+    # per-nnz accounting (same model as spmv/ops.flops_bytes): 2 FLOPs per
+    # nonzero; traffic = val + colidx + gathered x, the x reads being the
+    # latency-bound pointer-chasing share
+    nnz_np = np.asarray(
+        _spmv_r.make_problem(
+            jax.random.PRNGKey(0), n, n, row_block=8, max_nnz=64, width_pad=128
+        )[2]
+    )
+    total_nnz = float(nnz_np.sum())
+    return Workload(
+        name="kernel/spmv", fn=SPMV, args=args, dtype="fp32",
+        flops=2.0 * total_nnz, hbm_bytes=total_nnz * (4 + 4 + 4),
+        gather_bytes=total_nnz * 4,
+        problem=f"{n}^2 zipf", tags=("kernel",),
+        notes="predicated block-ELL SpMV; pointer-chasing Class 3",
+    )
+
+
+def _jacobi_workload() -> Workload:
+    import jax.numpy as jnp
+
+    n = 256
+    fb = _jac_r.flops_bytes(n, n, 4)
+
+    def args():
+        return (jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32),)
+
+    return Workload(
+        name="kernel/jacobi2d", fn=JACOBI_STEP, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"{n}^2", tags=("kernel",),
+        notes="5-point stencil sweep; memory-bound Class 2",
+    )
+
+
+def _qc_workload() -> Workload:
+    import jax.numpy as jnp
+
+    n_qubits = 14
+    fb = _qc_r.flops_bytes(n_qubits, 4)
+
+    def args():
+        n_amp = 1 << n_qubits
+        re = jnp.zeros((n_amp,), jnp.float32).at[0].set(1.0)
+        im = jnp.zeros((n_amp,), jnp.float32)
+        return (re, im)
+
+    def one_gate(re, im):
+        return RX_GATE(re, im, qubit=0, theta=0.25)
+
+    return Workload(
+        name="kernel/qc-gate", fn=one_gate, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"{n_qubits} qubits", tags=("kernel",),
+        notes="single RX gate over the state vector; streaming Class 2",
+    )
+
+
+def _flash_decode_workload() -> Workload:
+    import jax.numpy as jnp
+
+    B, KV, G, D, S = 2, 2, 4, 16, 64
+    valid = (40, 64)
+    fb = _fd_r.flops_bytes(B, KV, G, D, valid, dtype_bytes=4)
+
+    def args():
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, KV, G, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+        vl = jnp.asarray(valid, jnp.int32)
+        return (q, k, v, vl)
+
+    def one_step(q, k, v, vl):
+        return FLASH_DECODE(q, k, v, vl, block_s=16)
+
+    return Workload(
+        name="kernel/flash-decode", fn=one_step, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"B{B} KV{KV} G{G} D{D} S{S}", tags=("kernel",),
+        notes="predicated KV-cache attention decode; GQA reuse lifts AI",
+    )
+
+
+GEMM = register_kernel(
+    "gemm", _gemm_k.gemm,
+    ref=_gemm_r.gemm_ref,
+    static_argnames=("bm", "bn", "bk"),
+    workload=_gemm_workload,
+)
+
+STREAM_COPY = register_kernel(
+    "stream-copy", _stream_k.stream_copy,
+    ref=_stream_r.copy_ref,
+    static_argnames=("block_rows",),
+)
+STREAM_SCALE = register_kernel(
+    "stream-scale", _stream_k.stream_scale,
+    ref=_stream_r.scale_ref,
+    static_argnums=(1,), static_argnames=("block_rows",),
+)
+STREAM_ADD = register_kernel(
+    "stream-add", _stream_k.stream_add,
+    ref=_stream_r.add_ref,
+    static_argnames=("block_rows",),
+)
+STREAM_TRIAD = register_kernel(
+    "stream-triad", _stream_k.stream_triad,
+    ref=_stream_r.triad_ref,
+    static_argnums=(2,), static_argnames=("block_rows",),
+    workload=_stream_workload,
+)
+
+SPMV = register_kernel(
+    "spmv", _spmv_k.spmv_blockell,
+    ref=_spmv_r.spmv_ref,
+    static_argnames=("repeat",),
+    workload=_spmv_workload,
+)
+SPMV_FIXED = register_kernel(
+    "spmv-fixed-width", _spmv_k.spmv_fixed_width,
+    ref=_spmv_r.spmv_ref,
+)
+
+JACOBI_STEP = register_kernel(
+    "jacobi2d", _jac_k.jacobi_step,
+    ref=_jac_r.jacobi_ref,
+    static_argnames=("block_rows",),
+    workload=_jacobi_workload,
+)
+
+RX_GATE = register_kernel(
+    "qc-gate", _qc_k.rx_gate,
+    static_argnames=("qubit", "theta", "block_outer"),
+    workload=_qc_workload,
+)
+
+FLASH_DECODE = register_kernel(
+    "flash-decode", _fd_k.flash_decode,
+    ref=_fd_r.decode_ref,
+    static_argnames=("block_s",),
+    workload=_flash_decode_workload,
+)

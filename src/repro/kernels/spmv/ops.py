@@ -1,4 +1,5 @@
-"""Jit wrappers + the issue-count model for the SpMV kernels.
+"""SpMV kernel call surface (served by the kernel registry) + the
+issue-count model.
 
 ``issue_counts`` is the INST_RETIRED analogue: how many (8x128) vector tile
 issues each variant needs.  Predicated (SVE/VLA-style) SpMV issues
@@ -8,24 +9,16 @@ ratio is the paper's Fig. 3a SpMV result (1.99x vs 1.0x).
 
 from __future__ import annotations
 
-import functools
 import math
 
-import jax
 import numpy as np
 
-from repro.kernels.spmv.kernel import spmv_blockell, spmv_fixed_width
+from repro.kernels.registry import (
+    SPMV as spmv,
+    SPMV_FIXED as spmv_padded,
+)
 
-
-@functools.partial(jax.jit, static_argnames=("repeat", "interpret"))
-def spmv(values, col_idx, row_nnz, x, *, repeat: int = 1, interpret: bool = True):
-    return spmv_blockell(values, col_idx, row_nnz, x, repeat=repeat,
-                         interpret=interpret)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def spmv_padded(values, col_idx, row_nnz, x, *, interpret: bool = True):
-    return spmv_fixed_width(values, col_idx, row_nnz, x, interpret=interpret)
+__all__ = ["spmv", "spmv_padded", "issue_counts", "flops_bytes"]
 
 
 def issue_counts(row_nnz, width: int, lane: int = 128) -> dict:

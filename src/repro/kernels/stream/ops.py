@@ -1,20 +1,23 @@
-"""Jit wrappers for the STREAM kernels + the paper's ELEN instruction model."""
+"""STREAM kernel call surface (served by the kernel registry) + the paper's
+ELEN instruction model.
+
+``copy``/``scale``/``add``/``triad`` are :class:`~repro.kernels.registry.
+KernelOps` objects: call directly for interpret mode, ``.kernel(...)`` for
+the compiled Pallas path, ``.ref(...)`` for the oracle.
+"""
 
 from __future__ import annotations
 
-import functools
 import math
 
-import jax
+from repro.kernels.registry import (
+    STREAM_ADD as add,
+    STREAM_COPY as copy,
+    STREAM_SCALE as scale,
+    STREAM_TRIAD as triad,
+)
 
-from repro.kernels.stream import kernel as _k
-
-copy = jax.jit(_k.stream_copy, static_argnames=("block_rows", "interpret"))
-scale = jax.jit(_k.stream_scale, static_argnums=(1,),
-                static_argnames=("block_rows", "interpret"))
-add = jax.jit(_k.stream_add, static_argnames=("block_rows", "interpret"))
-triad = jax.jit(_k.stream_triad, static_argnums=(2,),
-                static_argnames=("block_rows", "interpret"))
+__all__ = ["copy", "scale", "add", "triad", "issue_counts"]
 
 
 def issue_counts(n_elements: int, elen_bits: int, vlen_bits: int = 128) -> dict:

@@ -280,13 +280,17 @@ def analytic_hbm_bytes(cell: Cell) -> Dict[str, float]:
 
 
 def analyze_cell(cell: Cell, mesh: Mesh, compiled, chip: hw.ChipSpec = hw.TPU_V5E):
-    """Events + three-term roofline for a compiled cell.
+    """Events + three-term roofline + SVE classification for a compiled cell.
 
     compute & collective terms: while-aware structural HLO model
     (core.hlo_cost); memory term: analytic TPU-traffic model
     (``analytic_hbm_bytes``), with the raw structural HLO traffic kept as a
-    diagnostic in events.
+    diagnostic in events.  The per-cell Eq.-1/Fig.-8 report rides the
+    unified pipeline (``repro.analysis.analyze_events``) on the adjusted
+    events.
     """
+    from repro.analysis import analyze_events
+
     hlo_text = compiled.as_text()
     chips = mesh.size
     events = counters_mod.events_from_compiled(
@@ -300,8 +304,19 @@ def analyze_cell(cell: Cell, mesh: Mesh, compiled, chip: hw.ChipSpec = hw.TPU_V5
     terms = roofline_mod.three_term(
         events, chip, chips, dtype=cell.dtype, model_flops=cell.model_flops
     )
+    sve = analyze_events(cell.name, events, chip, dtype=cell.dtype)
     mem = compiled.memory_analysis()
     return {
+        "sve": {
+            "perf_class": int(sve.perf_class),
+            "perf_class_name": sve.perf_class.name,
+            "vb": sve.vb,
+            "r_ins": sve.r_ins,
+            "ai": sve.ai,
+            "ai_inflection": sve.ai_inflection,
+            "bound": sve.bound,
+            "rationale": sve.decision.rationale,
+        },
         "cell": cell.name,
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "chips": chips,

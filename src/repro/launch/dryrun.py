@@ -50,7 +50,9 @@ def run_one(arch: str, shape: str, mesh_kind: str, baseline: bool, out_dir: str)
           f"compile={result['compile_s']:.1f}s "
           f"dominant={result['roofline']['dominant']} "
           f"bound={result['roofline']['bound_s']:.4g}s "
-          f"mem/dev={result['memory_per_device']['total_gb']:.2f}GB")
+          f"mem/dev={result['memory_per_device']['total_gb']:.2f}GB "
+          f"class={result['sve']['perf_class']}"
+          f"({result['sve']['perf_class_name']})")
     return result
 
 

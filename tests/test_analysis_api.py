@@ -1,0 +1,243 @@
+"""The unified Workload API + one-call pipeline (repro.analysis).
+
+Golden paths from the paper: registry kernels land in their Table-3
+decision-tree classes in ONE ``analyze()`` call; ``analyze_sweep`` compiles
+each workload exactly once across a multi-chip sweep; the registry exposes
+all six kernels and all 13 benchmark apps.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    ArtifactCache,
+    SVEAnalysis,
+    Workload,
+    analyze,
+    analyze_events,
+    analyze_sweep,
+    format_table,
+    get_workload,
+    list_workloads,
+    register,
+    workload,
+)
+from repro.analysis.workload import clear_registry
+from repro.core import hw
+from repro.core.decision_tree import PerfClass
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_kernels_and_apps():
+    names = list_workloads()
+    assert len(names) >= 19
+    for k in ("gemm", "stream-triad", "spmv", "jacobi2d", "qc-gate",
+              "flash-decode"):
+        assert f"kernel/{k}" in names
+    import benchmarks.apps as apps_mod
+
+    assert len(apps_mod.APP_NAMES) == 13
+    for a in apps_mod.APP_NAMES:
+        assert f"app/{a}" in names
+
+
+def test_get_workload_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown workload"):
+        get_workload("kernel/nope")
+
+
+def test_workload_decorator_registers_and_returns_fn():
+    @workload(name="test/saxpy", dtype="fp32",
+              args=lambda: (jnp.ones(128), jnp.ones(128)),
+              flops=256.0, hbm_bytes=128 * 3 * 4.0, replace=True)
+    def saxpy(x, y):
+        return x + 2.0 * y
+
+    wl = get_workload("test/saxpy")
+    assert wl.fn is saxpy
+    assert saxpy.__workload__ is wl
+    assert wl.has_analytic_model
+    assert len(wl.example_args()) == 2  # lazy thunk resolved on demand
+
+
+def test_duplicate_registration_rejected():
+    register(Workload(name="test/dup"), replace=True)
+    with pytest.raises(ValueError, match="already registered"):
+        register(Workload(name="test/dup"))
+
+
+# ---------------------------------------------------------------------------
+# golden-path decision-tree classes (paper Table 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,expected", [
+    ("kernel/stream-triad", PerfClass.MEMORY_BANDWIDTH_BOUND),  # Class 2
+    ("kernel/spmv", PerfClass.MEMORY_LATENCY_BOUND),            # Class 3
+    ("kernel/gemm", PerfClass.SPEEDUP),                         # Class 4
+])
+def test_analyze_golden_classes(name, expected):
+    """One call, no caller-side wiring of counters/metrics/roofline/tree."""
+    result = analyze(name)  # default chip: the paper's grace-core model
+    assert isinstance(result, SVEAnalysis)
+    assert result.perf_class == expected
+    # the report carries every headline quantity of the paper's method
+    assert result.vb == 4.0  # fp32 on 128-bit SVE
+    assert result.r_ins > 1.0
+    assert result.ai > 0.0
+    assert result.bound in ("memory-bound", "compute-bound")
+    assert result.ai_inflection > 0.0
+
+
+def test_analyze_report_is_serializable():
+    result = analyze("kernel/gemm")
+    d = result.to_dict()
+    for key in ("vb", "r_ins", "ai", "bound", "perf_class", "events"):
+        assert key in d
+    assert isinstance(result.to_json(), str)
+    assert "kernel/gemm" in result.table()
+    assert "class" in format_table([result])
+
+
+def test_analyze_accepts_ad_hoc_workload_compiled_source():
+    a = jax.random.normal(jax.random.PRNGKey(0), (128, 128), jnp.float32)
+    wl = Workload(name="adhoc-matmul", fn=lambda x: x @ x, args=(a,),
+                  dtype="fp32")
+    assert not wl.has_analytic_model
+    result = analyze(wl, hw.GRACE_CORE)
+    assert result.source == "compiled"
+    # a 128^3 matmul is unmistakably a dot in the artifact
+    assert result.events.flops >= 2 * 128**3
+    assert result.perf_class in tuple(PerfClass)
+
+
+def test_analyze_multi_chip_classes_differ_by_knee():
+    """QC on grace-core: AI sits between the scalar knee (1T) and the knee
+    once bandwidth is shared — the decision is chip-model-dependent."""
+    r_core = analyze("kernel/gemm", hw.GRACE_CORE)
+    r_tpu = analyze("kernel/gemm", hw.TPU_V5E, dtype="fp32")
+    assert r_core.chip == "grace-core"
+    assert r_tpu.chip == "tpu-v5e"
+    assert r_core.vb != r_tpu.vb  # 128-bit SVE vs 8x128x32 VPU issue
+
+
+def test_time_roi_measures_wall_time():
+    result = analyze("kernel/stream-triad", time_roi=True)
+    assert result.wall_s is not None and result.wall_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# analyze_sweep: compile-once caching
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_compiles_each_workload_once():
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 64), jnp.float32)
+    wls = [
+        Workload(name="sweep-mm", fn=lambda x: x @ x, args=(a,), dtype="fp32"),
+        Workload(name="sweep-add", fn=lambda x: x + x, args=(a,), dtype="fp32"),
+    ]
+    cache = ArtifactCache()
+    results = analyze_sweep(
+        wls, chips=(hw.GRACE_CORE, hw.GRACE_SOCKET, hw.TPU_V5E), cache=cache
+    )
+    assert len(results) == 2 * 3
+    assert cache.compiles == 2  # one compile per workload, not per cell
+    assert cache.hits == 2 * 2  # remaining (workload, chip) cells hit cache
+
+
+def test_sweep_analytic_source_never_compiles():
+    cache = ArtifactCache()
+    results = analyze_sweep(
+        ["kernel/gemm", "kernel/stream-triad"],
+        chips=(hw.GRACE_CORE, hw.GRACE_SOCKET),
+        cache=cache,
+    )
+    assert len(results) == 4
+    assert cache.compiles == 0  # analytic models short-circuit compilation
+    assert all(r.source == "analytic" for r in results)
+
+
+def test_sweep_elen_sensitivity_moves_vb_and_r_ins():
+    """The paper's ELEN sweep at fixed VLEN: fp64 -> fp32 doubles VB, and
+    the analytic issue model follows the overridden ELEN (not the
+    workload's base dtype)."""
+    results = analyze_sweep(
+        ["kernel/stream-triad"], chips=(hw.GRACE_CORE,),
+        dtypes=("fp64", "fp32", "fp16"),
+    )
+    assert [r.vb for r in results] == [2.0, 4.0, 8.0]
+    assert [r.r_ins for r in results] == [2.0, 4.0, 8.0]
+    assert [r.report.dtype for r in results] == ["fp64", "fp32", "fp16"]
+
+
+def test_cache_distinguishes_same_named_workloads():
+    """Two distinct workloads sharing a name must not share events."""
+    a = jnp.ones((32, 32), jnp.float32)
+    small = Workload(name="same-name", fn=lambda x: x + x, args=(a,))
+    big = Workload(name="same-name", fn=lambda x: x @ x, args=(a,))
+    cache = ArtifactCache()
+    ev_small = analyze(small, cache=cache).events
+    ev_big = analyze(big, cache=cache).events
+    assert cache.compiles == 2
+    assert ev_big.flops > ev_small.flops  # matmul >> elementwise add
+
+
+def test_clear_registry_recovers_builtins():
+    """clear_registry + next lookup re-registers kernels and apps."""
+    names_before = set(list_workloads())
+    clear_registry()
+    try:
+        assert set(list_workloads()) >= {
+            n for n in names_before if n.startswith(("kernel/", "app/"))
+        }
+        assert analyze("kernel/gemm").perf_class == PerfClass.SPEEDUP
+    finally:
+        clear_registry()
+        list_workloads()  # restore for later tests
+
+
+def test_tag_filter_does_not_materialize_lazy_entries():
+    kernels = list_workloads(tags=("kernel",))
+    assert len(kernels) == 6
+    assert all(k.startswith("kernel/") for k in kernels)
+    apps = list_workloads(tags=("app",))
+    assert len(apps) == 13
+    # the filter must come from registry-side tags, not from building the
+    # suite: the LLM apps take ~10s to build, a pure name filter must not
+    assert all(a.startswith("app/") for a in apps)
+
+
+# ---------------------------------------------------------------------------
+# apps ride the same API
+# ---------------------------------------------------------------------------
+
+
+def test_app_suite_members_are_workloads():
+    import benchmarks.apps as apps_mod
+
+    wl = get_workload("app/STREAM")
+    assert isinstance(wl, Workload)
+    assert isinstance(wl, apps_mod.App)
+    result = analyze(wl)
+    assert result.perf_class == PerfClass.MEMORY_BANDWIDTH_BOUND
+    # the issue model (Eq. 1) is inherited from Workload
+    ins = wl.issue_model(hw.GRACE_CORE)
+    assert ins["vb"] == 4.0
+
+
+def test_analyze_events_tail_matches_full_pipeline():
+    from repro.core.counters import events_from_analytic
+
+    ev = events_from_analytic(flops=1e9, hbm_bytes=1e6)  # AI = 1000
+    result = analyze_events("synthetic", ev, hw.GRACE_CORE, dtype="fp32")
+    assert result.perf_class == PerfClass.SPEEDUP
+    assert result.ai == pytest.approx(1000.0)

@@ -4,8 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 import repro.configs as configs
 from repro.configs.base import SHAPES, ShapeConfig

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.core import hlo_cost
-from repro.core.counters import events_from_compiled
+from repro.core.counters import _cost_get, events_from_compiled
 
 N, K = 128, 8
 
@@ -40,8 +40,10 @@ def _unrolled_matmul():
 
 def test_cost_analysis_undercounts_scan_bodies():
     """The rejected counter: scan flops == 1 iteration, unrolled == K."""
-    scan_flops = _scan_matmul().cost_analysis()["flops"]
-    unrolled_flops = _unrolled_matmul().cost_analysis()["flops"]
+    # cost_analysis() returns a dict or a 1-list of dicts depending on the
+    # jax version; _cost_get is the version-proof accessor counters.py uses
+    scan_flops = _cost_get(_scan_matmul().cost_analysis(), "flops")
+    unrolled_flops = _cost_get(_unrolled_matmul().cost_analysis(), "flops")
     assert unrolled_flops == pytest.approx(K * 2 * N**3, rel=0.01)
     assert scan_flops == pytest.approx(2 * N**3, rel=0.01)  # body counted once
 

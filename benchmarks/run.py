@@ -2,21 +2,27 @@
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig3_vectorization]
-    PYTHONPATH=src python -m benchmarks.run --out experiments/bench
+    PYTHONPATH=src python -m benchmarks.run --out experiments/bench --jobs 4
     PYTHONPATH=src python -m benchmarks.run --list
 
-Writes one CSV per benchmark and prints each table.  ``--list`` enumerates
-both the figure/table benchmarks and every workload registered in the
-unified ``repro.analysis`` registry.
+Writes one CSV per benchmark, a machine-readable ``summary.json`` (per-
+benchmark rows / wall time / pass-fail — the stable artifact for perf
+trajectory tracking), and prints each table.  ``--jobs N`` runs benchmarks
+concurrently on a thread pool (each benchmark's analyses share the
+persistent artifact store, so repeat runs skip compilation).  ``--list``
+enumerates both the figure/table benchmarks and every workload registered
+in the unified ``repro.analysis`` registry.
 """
 
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import os
 import sys
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 
 def _write_csv(path: str, rows) -> None:
@@ -58,11 +64,30 @@ def _list() -> int:
     return 0
 
 
+def _run_benchmark(name: str, fn) -> dict:
+    """Execute one benchmark; never raises (summary rows record failures)."""
+    t0 = time.time()
+    try:
+        rows = fn()
+        return {"name": name, "ok": True, "rows": len(rows),
+                "wall_s": round(time.time() - t0, 3), "error": None,
+                "_rows": rows}
+    except Exception as e:  # noqa: BLE001 — report all benchmark failures
+        import traceback
+
+        traceback.print_exc()
+        return {"name": name, "ok": False, "rows": 0,
+                "wall_s": round(time.time() - t0, 3), "error": repr(e),
+                "_rows": []}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single benchmark")
     ap.add_argument("--list", action="store_true",
                     help="list benchmarks + registered workloads and exit")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="run benchmarks concurrently on a thread pool")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args(argv)
 
@@ -78,24 +103,41 @@ def main(argv=None) -> int:
 
     os.makedirs(args.out, exist_ok=True)
     todo = {args.only: ALL[args.only]} if args.only else ALL
-    failed = []
-    for name, fn in todo.items():
-        t0 = time.time()
-        try:
-            rows = fn()
-        except Exception as e:  # noqa: BLE001 — report all benchmark failures
-            import traceback
+    t_total = time.time()
+    if args.jobs > 1 and len(todo) > 1:
+        with ThreadPoolExecutor(max_workers=args.jobs) as pool:
+            results = list(pool.map(
+                lambda item: _run_benchmark(*item), todo.items()
+            ))
+    else:
+        results = [_run_benchmark(name, fn) for name, fn in todo.items()]
 
-            traceback.print_exc()
-            failed.append((name, repr(e)))
+    failed = []
+    for res in results:
+        rows = res.pop("_rows")
+        if not res["ok"]:
+            failed.append((res["name"], res["error"]))
             continue
-        _write_csv(os.path.join(args.out, f"{name}.csv"), rows)
-        _print_table(name, rows)
-        print(f"[{name}: {len(rows)} rows in {time.time() - t0:.1f}s]")
+        _write_csv(os.path.join(args.out, f"{res['name']}.csv"), rows)
+        _print_table(res["name"], rows)
+        print(f"[{res['name']}: {res['rows']} rows in {res['wall_s']:.1f}s]")
+
+    summary = {
+        "kind": "benchmarks_summary",
+        "benchmarks": results,  # per-benchmark rows, wall time, pass/fail
+        "total_wall_s": round(time.time() - t_total, 3),
+        "jobs": args.jobs,
+        "passed": sum(1 for r in results if r["ok"]),
+        "failed": len(failed),
+    }
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+
     if failed:
         print(f"\nFAILED: {failed}")
         return 1
-    print(f"\nall {len(todo)} benchmarks written to {args.out}/")
+    print(f"\nall {len(todo)} benchmarks written to {args.out}/ "
+          f"(+ summary.json)")
     return 0
 
 

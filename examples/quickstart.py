@@ -3,7 +3,9 @@ vectorization analysis on the compiled step — the 60-second tour.
 
 The analysis is ONE call now: wrap the step in a ``Workload`` and
 ``analyze`` it; counters -> Eq. 1 metrics -> adapted roofline (Eq. 2) ->
-Fig. 8 decision tree all run inside the pipeline.
+Fig. 8 decision tree all run inside the pipeline.  Extracted events persist
+in the content-addressed artifact store, so a second run of this script
+performs zero analysis compiles.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.configs as configs
-from repro.analysis import Workload, analyze
+from repro.analysis import DEFAULT_CACHE, Workload, analyze
 from repro.configs.base import ShapeConfig
 from repro.core import hw
 from repro.data import pipeline
@@ -54,6 +56,12 @@ def main():
           f"— {result.perf_class.describe()}")
     print(f"  {result.decision.rationale}")
     print("\n" + result.table())
+
+    # 4. events persisted by fingerprint: a re-run of this script loads them
+    # from the artifact store instead of recompiling the step
+    store = DEFAULT_CACHE.store
+    print(f"\n[analysis: {DEFAULT_CACHE.compiles} compiles, "
+          f"{DEFAULT_CACHE.store_hits} store hits; store at {store.cache_dir}]")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,11 @@ JAX function and get the full SVE-style vectorization report — validated
 counters, VB / R_ins, adapted roofline placement, and the Fig. 8 decision
 tree — for both the Grace-class CPU model and the TPU target.
 
-All wiring now goes through the unified API: wrap the function in a
-``Workload`` and call ``analyze`` (or sweep chips with ``analyze_sweep``,
-which compiles each workload exactly once).
+All wiring goes through the unified API: wrap each function in a
+``Workload`` and run ONE ``analyze_sweep`` over the whole set.  The sweep
+fans (workload x chip) cells over a thread pool (``jobs=4``) while the
+single-flight ArtifactCache keeps compiles at one per workload, and the
+persistent store makes a second run of this script compile nothing at all.
 
     PYTHONPATH=src python examples/vectorization_report.py
 """
@@ -13,43 +15,19 @@ which compiles each workload exactly once).
 import jax
 import jax.numpy as jnp
 
-from repro.analysis import ArtifactCache, Workload, analyze_sweep, format_table
+from repro.analysis import ArtifactCache, DEFAULT_STORE, Workload, analyze_sweep, format_table
 from repro.core import hw
 
 CHIPS = (hw.GRACE_CORE, hw.TPU_V5E)
 
 
-def report(name, fn, args, dtype="fp32", cache=None):
-    """One call: compile once, analyze on every chip model."""
-    wl = Workload(name=name, fn=fn, args=args, dtype=dtype)
-    results = analyze_sweep([wl], chips=CHIPS, cache=cache)
-    ev = results[0].events
-    print(f"\n### {name}")
-    print(f"  flops={ev.flops:.3e}  traffic={ev.bytes_accessed:.3e}B  "
-          f"gather={ev.gather_bytes:.3e}B  vec_frac={ev.vectorizable_fraction:.2%} "
-          f"mxu_share={ev.mxu_fraction:.2%}")
-    print(f"  counter validation: structural flops {ev.flops:.3e} vs "
-          f"raw cost_analysis {ev.xla_raw_flops:.3e} "
-          f"(scan trip counts: {ev.while_trip_counts or 'none'})")
-    print(format_table(results))
-    return results
-
-
-def main():
+def build_workloads():
     n = 512
     a = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
     b = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
-    cache = ArtifactCache()
-
-    report("gemm-512", lambda x, y: x @ y, (a, b), cache=cache)
-
-    report("stream-triad", lambda x, y: x + 3.0 * y, (a, b), cache=cache)
-
     # pointer chasing: the SpMV pattern
     idx = jax.random.randint(jax.random.PRNGKey(2), (n * n,), 0, n * n)
     flat = a.reshape(-1)
-    report("gather-reduce", lambda x, i: jnp.take(x, i).sum(), (flat, idx),
-           cache=cache)
 
     # scanned layers: exercises the while-aware counter path
     def scanned(x):
@@ -57,13 +35,40 @@ def main():
             return jnp.tanh(c @ c), None
         y, _ = jax.lax.scan(body, x, None, length=8)
         return y
-    report("scan-8-layers", scanned, (a,), cache=cache)
 
-    # FFT: not MXU-vectorizable (the paper's FFTW Class-1 case)
-    report("fft2d", lambda x, _: jnp.abs(jnp.fft.fft2(x)), (a, b), cache=cache)
+    return [
+        Workload(name="gemm-512", fn=lambda x, y: x @ y, args=(a, b)),
+        Workload(name="stream-triad", fn=lambda x, y: x + 3.0 * y, args=(a, b)),
+        Workload(name="gather-reduce", fn=lambda x, i: jnp.take(x, i).sum(),
+                 args=(flat, idx)),
+        Workload(name="scan-8-layers", fn=scanned, args=(a,)),
+        # FFT: not MXU-vectorizable (the paper's FFTW Class-1 case)
+        Workload(name="fft2d", fn=lambda x, _: jnp.abs(jnp.fft.fft2(x)),
+                 args=(a, b)),
+    ]
 
-    print(f"\n[{cache.compiles} compiles for "
-          f"{cache.compiles + cache.hits} analysis cells]")
+
+def main():
+    wls = build_workloads()
+    cache = ArtifactCache(store=DEFAULT_STORE)
+    results = analyze_sweep(wls, chips=CHIPS, cache=cache, jobs=4)
+
+    per_chip = len(CHIPS)
+    for i, wl in enumerate(wls):
+        ev = results[i * per_chip].events
+        print(f"\n### {wl.name}")
+        print(f"  flops={ev.flops:.3e}  traffic={ev.bytes_accessed:.3e}B  "
+              f"gather={ev.gather_bytes:.3e}B  vec_frac={ev.vectorizable_fraction:.2%} "
+              f"mxu_share={ev.mxu_fraction:.2%}")
+        print(f"  counter validation: structural flops {ev.flops:.3e} vs "
+              f"raw cost_analysis {ev.xla_raw_flops:.3e} "
+              f"(scan trip counts: {ev.while_trip_counts or 'none'})")
+        print(format_table(results[i * per_chip:(i + 1) * per_chip]))
+
+    cells = len(results)
+    print(f"\n[{cells} cells: {cache.compiles} compiles, "
+          f"{cache.store_hits} store hits, {cache.hits} cache hits — "
+          f"store at {cache.store.cache_dir}]")
 
 
 if __name__ == "__main__":

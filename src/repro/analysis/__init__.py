@@ -8,7 +8,10 @@ adapted roofline (Eq. 2) -> Fig. 8 decision tree — behind two entry points:
   register it globally;
 * :func:`analyze` / :func:`analyze_sweep` — run the whole pipeline on any
   registered (or ad-hoc) workload in one call, returning a typed
-  :class:`SVEAnalysis` report.
+  :class:`SVEAnalysis` report.  Sweeps parallelize with ``jobs=N``
+  (single-flight compile dedup), and extracted events persist across
+  processes in the content-addressed :class:`ArtifactStore` (fingerprint =
+  name + arg shapes/dtypes + fn hash), so repeat runs skip compilation.
 
     from repro.analysis import analyze, list_workloads
 
@@ -26,9 +29,15 @@ from repro.analysis.workload import (  # noqa: F401
     register_lazy,
     workload,
 )
+from repro.analysis.store import (  # noqa: F401
+    ArtifactStore,
+    default_store,
+    workload_fingerprint,
+)
 from repro.analysis.pipeline import (  # noqa: F401
     ArtifactCache,
     DEFAULT_CACHE,
+    DEFAULT_STORE,
     SVEAnalysis,
     analyze,
     analyze_compiled,

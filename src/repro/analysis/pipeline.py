@@ -15,13 +15,20 @@ Event sources (``source=``):
 
 ``analyze_sweep`` amortizes compilation: compiled artifacts are
 chip-independent (events are GLOBAL quantities), so a multi-chip /
-multi-ELEN sweep compiles each workload exactly once via ``ArtifactCache``.
+multi-ELEN sweep compiles each workload exactly once via ``ArtifactCache``
+— and, backed by the persistent :class:`~repro.analysis.store.ArtifactStore`,
+at most once across *processes*.  ``analyze_sweep(..., jobs=N)`` fans the
+(workload x chip x dtype) cells over a thread pool; single-flight
+deduplication in the cache guarantees concurrent cells of the same workload
+wait on one compile rather than racing.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
 from repro.core import hw, metrics
@@ -29,9 +36,14 @@ from repro.core.counters import Events, events_from_analytic, events_from_compil
 from repro.core.decision_tree import Decision, PerfClass, classify
 from repro.core.metrics import VectorizationReport
 from repro.core.roofline import AdaptedRoofline, adapted_roofline
+from repro.analysis.store import ArtifactStore, default_store, workload_fingerprint
 from repro.analysis.workload import Workload, get_workload, list_workloads
 
 WorkloadLike = Union[str, Workload]
+
+#: Sentinel: resolve ``store.default_store()`` lazily, at first use (so the
+#: ``$REPRO_ARTIFACT_DIR`` override is honored even for module-level caches).
+DEFAULT_STORE = "default"
 
 
 # ---------------------------------------------------------------------------
@@ -40,44 +52,109 @@ WorkloadLike = Union[str, Workload]
 
 
 class ArtifactCache:
-    """Cache of per-workload compiled-artifact Events.
+    """In-memory + optionally disk-backed cache of per-workload Events.
 
     Events are chip-independent (global flops/bytes/collective quantities),
-    so one compile serves every (chip, dtype) cell of a sweep.  ``compiles``
-    and ``hits`` are exposed for tests and cost accounting.
+    so one compile serves every (chip, dtype) cell of a sweep.  Lookups are
+    **single-flight**: under a parallel sweep, concurrent cells for the same
+    workload block on one leader's compile instead of compiling N times.
+
+    ``store`` adds a persistent layer keyed by workload fingerprint (see
+    :mod:`repro.analysis.store`): pass an :class:`ArtifactStore`, the
+    :data:`DEFAULT_STORE` sentinel for the shared default directory, any
+    other string as a cache-directory path, or ``None`` (default) for a
+    process-local, memory-only cache.
+
+    ``compiles`` / ``hits`` / ``store_hits`` are exposed for tests and cost
+    accounting (``hits`` counts in-memory hits only).
     """
 
-    def __init__(self) -> None:
-        # keyed by Workload identity, with the Workload kept alive so ids
-        # can't be recycled: two distinct workloads that happen to share a
-        # name must never read each other's events
-        self._events: Dict[int, tuple] = {}
+    def __init__(self, store: Union[ArtifactStore, str, None] = None) -> None:
+        # keyed by workload fingerprint (content address), NOT object
+        # identity: two distinct workloads sharing a name but differing in
+        # shapes/dtypes/body get different keys, while the cache never pins
+        # request Workloads (and their example arrays) for the process
+        # lifetime — a long-lived AnalysisService stays bounded by the
+        # small Events payloads
+        self._events: Dict[str, Events] = {}
+        self._store = store
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, threading.Event] = {}
         self.compiles = 0
         self.hits = 0
+        self.store_hits = 0
+
+    @property
+    def store(self) -> Optional[ArtifactStore]:
+        if isinstance(self._store, str):
+            if self._store == DEFAULT_STORE:
+                return default_store()
+            # any other string is a cache directory (one store per dir)
+            from repro.analysis.store import _store_for
+
+            return _store_for(self._store)
+        return self._store
 
     def events_for(self, wl: Workload) -> Events:
         if wl.fn is None:
             raise ValueError(f"{wl.name}: no callable to compile")
-        key = id(wl)
-        if key in self._events:
-            self.hits += 1
-            return self._events[key][1]
-        import jax
+        key = workload_fingerprint(wl)
+        while True:
+            with self._lock:
+                if key in self._events:
+                    self.hits += 1
+                    return self._events[key]
+                flight = self._inflight.get(key)
+                if flight is None:
+                    # become the leader for this workload
+                    self._inflight[key] = threading.Event()
+                    break
+            # another thread is compiling this workload: wait, then re-check
+            # (if the leader failed, the loop elects a new leader)
+            flight.wait()
+        try:
+            ev = self._load_or_compile(wl, key)
+            with self._lock:
+                self._events[key] = ev
+            return ev
+        finally:
+            with self._lock:
+                self._inflight.pop(key).set()
 
-        self.compiles += 1
-        compiled = jax.jit(wl.fn).lower(*wl.example_args()).compile()
+    def _load_or_compile(self, wl: Workload, fingerprint: str) -> Events:
+        store = self.store
+        if store is not None:
+            ev = store.get(fingerprint)
+            if ev is not None:
+                with self._lock:
+                    self.store_hits += 1
+                return ev
+        with self._lock:
+            self.compiles += 1
+        # already-jitted callables (and KernelOps) expose .lower — use it
+        # rather than re-wrapping, which would re-trace static arguments
+        lower = getattr(wl.fn, "lower", None)
+        if lower is None:
+            import jax
+
+            lower = jax.jit(wl.fn).lower
+        compiled = lower(*wl.example_args()).compile()
         ev = events_from_compiled(compiled, n_devices=wl.n_devices)
-        self._events[key] = (wl, ev)
+        if store is not None:
+            store.put(fingerprint, ev, workload=wl.name)
         return ev
 
     def clear(self) -> None:
-        self._events.clear()
-        self.compiles = 0
-        self.hits = 0
+        with self._lock:
+            self._events.clear()
+            self.compiles = 0
+            self.hits = 0
+            self.store_hits = 0
 
 
-#: Module-level default cache shared by bare ``analyze`` calls.
-DEFAULT_CACHE = ArtifactCache()
+#: Module-level default cache shared by bare ``analyze`` calls — persistent
+#: across processes via the default ArtifactStore.
+DEFAULT_CACHE = ArtifactCache(store=DEFAULT_STORE)
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +319,7 @@ def _time_roi(wl: Workload) -> Optional[float]:
     prof.start_measure()
     jax.block_until_ready(wl.fn(*args))
     prof.stop_measure()
-    return prof._acc / max(prof._repeats, 1)
+    return prof.mean_roi_s()
 
 
 def analyze(
@@ -253,14 +330,22 @@ def analyze(
     source: str = "auto",
     time_roi: bool = False,
     cache: Optional[ArtifactCache] = None,
+    store: Union[ArtifactStore, str, None] = None,
 ) -> SVEAnalysis:
     """Run the paper's full method on one workload, on one chip model.
 
     Chains compile/lower (cached) -> event extraction -> Eq. 1 metrics ->
     adapted roofline (Eq. 2) -> Fig. 8 decision tree, plus an optional
     profiler-timed ROI, and returns the typed :class:`SVEAnalysis`.
+
+    Without ``cache``, events come from the module-level ``DEFAULT_CACHE``
+    (persistent via the default ArtifactStore, so repeat processes skip
+    compilation); pass ``store`` to persist under a specific store instead,
+    or an explicit memory-only ``ArtifactCache()`` to bypass persistence.
     """
     wl = _resolve(wl)
+    if cache is None:
+        cache = ArtifactCache(store=store) if store is not None else DEFAULT_CACHE
     dtype = dtype or wl.dtype
     if source not in ("auto", "analytic", "compiled"):
         raise ValueError(f"source must be auto|analytic|compiled, got {source!r}")
@@ -280,7 +365,7 @@ def analyze(
         ev.nonvec_flops = wl.flops * (1.0 - wl.vectorizable_fraction)
         report = wl.report(chip, dtype=dtype)
     else:
-        ev = (cache or DEFAULT_CACHE).events_for(wl)
+        ev = cache.events_for(wl)
         report = _report_from_events(wl.name, dtype, ev, chip)
 
     rl = adapted_roofline(chip, dtype)
@@ -343,28 +428,39 @@ def analyze_sweep(
     source: str = "auto",
     time_roi: bool = False,
     cache: Optional[ArtifactCache] = None,
+    store: Union[ArtifactStore, str, None] = None,
+    jobs: int = 1,
 ) -> List[SVEAnalysis]:
     """``analyze`` over a (workload x chip x dtype) grid, compiling each
     workload at most once (events are chip-independent; see ArtifactCache).
 
     ``workloads`` defaults to every registered workload; ``dtypes`` defaults
-    to each workload's own dtype.
+    to each workload's own dtype.  Without an explicit ``cache``, the sweep
+    is backed by the persistent default ArtifactStore (or ``store``), so a
+    repeat sweep in a fresh process performs zero compiles.
+
+    ``jobs > 1`` fans the cells over a thread pool.  Results are returned in
+    the same deterministic (workload, chip, dtype) order as the serial path,
+    and the cache's single-flight guarantee keeps the compile count at one
+    per unique workload regardless of concurrency.
     """
-    cache = cache or ArtifactCache()
+    if cache is None:
+        cache = ArtifactCache(store=store if store is not None else DEFAULT_STORE)
     names = list(workloads) if workloads is not None else list_workloads()
-    out: List[SVEAnalysis] = []
+    cells: List[tuple] = []
     for w in names:
         wl = _resolve(w)
         for chip in chips:
             for dtype in dtypes or (wl.dtype,):
-                out.append(
-                    analyze(
-                        wl,
-                        chip,
-                        dtype=dtype,
-                        source=source,
-                        time_roi=time_roi,
-                        cache=cache,
-                    )
-                )
-    return out
+                cells.append((wl, chip, dtype))
+
+    def run_cell(cell: tuple) -> SVEAnalysis:
+        wl, chip, dtype = cell
+        return analyze(
+            wl, chip, dtype=dtype, source=source, time_roi=time_roi, cache=cache
+        )
+
+    if jobs <= 1 or len(cells) <= 1:
+        return [run_cell(c) for c in cells]
+    with ThreadPoolExecutor(max_workers=jobs) as pool:
+        return list(pool.map(run_cell, cells))

@@ -1,0 +1,306 @@
+"""Persistent, content-addressed artifact store for extracted Events.
+
+Compiling a workload just to read its PMU-analogue counters is the expensive
+step of the pipeline (seconds per workload for the LLM cells), and the
+counters themselves are tiny, chip-independent JSON.  This module persists
+them across *processes*: each workload is keyed by a **fingerprint** of what
+actually determines its compiled artifact —
+
+  * the workload name,
+  * the abstract shapes/dtypes of its example arguments (values don't reach
+    the lowered HLO, shapes do),
+  * a structural hash of the callable's bytecode (code, consts, names,
+    closure values), and
+  * the device count.
+
+so a re-run of ``analyze`` / ``analyze_sweep`` / ``benchmarks.run`` in a
+fresh process gets a store hit and performs zero compiles, while changing
+an input shape, a dtype, or the function body changes the fingerprint and
+forces a recompile.
+
+Storage is one JSON file per fingerprint under a cache directory
+(``$REPRO_ARTIFACT_DIR``, default ``~/.cache/repro/artifacts``).  Writes are
+atomic (temp file + rename) so parallel sweeps and concurrent processes can
+share one directory; unreadable or truncated files are treated as misses
+and deleted, never raised.
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+from repro.core.counters import Events
+
+STORE_VERSION = 1
+
+#: Environment variable overriding the default store directory.
+STORE_DIR_ENV = "REPRO_ARTIFACT_DIR"
+
+
+def _default_dir() -> str:
+    return os.environ.get(
+        STORE_DIR_ENV,
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "artifacts"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workload fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def _code_token(fn: Any, parts: list, seen: set) -> None:
+    """Append a structural description of ``fn``'s bytecode to ``parts``.
+
+    Uses co_code + names + nested code objects (NOT memory addresses or
+    source locations), so the token is stable across processes for the same
+    source — including lambdas, which ``__qualname__`` alone cannot
+    distinguish.
+    """
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        # jit wrappers / KernelOps carry the original via __wrapped__
+        wrapped = getattr(fn, "__wrapped__", None)
+        if wrapped is not None and id(wrapped) not in seen:
+            seen.add(id(wrapped))
+            _code_token(wrapped, parts, seen)
+            return
+        parts.append(getattr(fn, "__qualname__", None) or repr(type(fn)))
+        return
+    stack = [code]
+    while stack:
+        c = stack.pop()
+        if id(c) in seen:
+            continue
+        seen.add(id(c))
+        parts.append(c.co_code.hex())
+        parts.append(repr(c.co_names))
+        parts.append(repr(c.co_varnames))
+        for const in c.co_consts:
+            if hasattr(const, "co_code"):
+                stack.append(const)
+            else:
+                parts.append(repr(const))
+    closure = getattr(fn, "__closure__", None)
+    if closure:
+        for cell in closure:
+            try:
+                _value_token(cell.cell_contents, parts, seen)
+            except ValueError:  # empty cell
+                parts.append("<empty-cell>")
+    # default-argument values are behavior, but live outside co_consts
+    for d in getattr(fn, "__defaults__", None) or ():
+        _value_token(d, parts, seen)
+    for k, v in sorted((getattr(fn, "__kwdefaults__", None) or {}).items()):
+        parts.append(k)
+        _value_token(v, parts, seen)
+
+
+def _value_token(value: Any, parts: list, seen: set) -> None:
+    """Token for a closure-cell / default / partial-bound value.
+
+    Shaped values (arrays) contribute their abstract (shape, dtype): array
+    ``repr`` elides both for large arrays, so two different-shaped captures
+    would otherwise collide — and shapes, not values, are what reach the
+    lowered HLO.  Callables recurse into their bytecode: their ``repr``
+    embeds a memory address, which would make fingerprints process-local.
+    """
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        parts.append(_arg_signature(value))
+        return
+    if callable(value):
+        if id(value) not in seen:
+            seen.add(id(value))
+            _code_token(value, parts, seen)
+        return
+    parts.append(repr(value)[:256])
+
+
+def fn_token(fn: Any) -> str:
+    """Cross-process-stable identity token for a workload callable."""
+    parts: list = []
+    seen: set = set()
+    f = fn
+    while isinstance(f, functools.partial):
+        for a in f.args:
+            _value_token(a, parts, seen)
+        for k, v in sorted((f.keywords or {}).items()):
+            parts.append(k)
+            _value_token(v, parts, seen)
+        f = f.func
+    _code_token(f, parts, seen)
+    return "|".join(parts)
+
+
+def _arg_signature(arg: Any) -> str:
+    """Abstract (shape, dtype) signature of one example argument."""
+    shape = getattr(arg, "shape", None)
+    dtype = getattr(arg, "dtype", None)
+    if shape is not None:
+        return f"{tuple(shape)}:{dtype}"
+    if isinstance(arg, dict):
+        items = ",".join(f"{k}={_arg_signature(v)}" for k, v in sorted(arg.items()))
+        return "{" + items + "}"
+    if isinstance(arg, (list, tuple)):
+        return "(" + ",".join(_arg_signature(v) for v in arg) + ")"
+    return f"{type(arg).__name__}:{arg!r}"
+
+
+@functools.lru_cache(maxsize=1)
+def _compiler_token() -> str:
+    """jax/jaxlib versions: a compiler upgrade changes what a compile would
+    produce (fusion, traffic, op census), so it must change the address."""
+    try:
+        import jax
+        import jaxlib
+
+        return f"jax={jax.__version__},jaxlib={jaxlib.version.__version__}"
+    except Exception:
+        return "jax=unknown"
+
+
+def workload_fingerprint(wl: Any) -> str:
+    """Content address of a Workload's compiled-artifact events.
+
+    name + abstract arg shapes/dtypes + fn hash + n_devices + compiler
+    version, hex-digested.  Materializes lazy example args (array
+    construction) but never compiles.
+    """
+    h = hashlib.sha256()
+    h.update(f"v{STORE_VERSION}|{_compiler_token()}|".encode())
+    h.update(f"{wl.name}|n_devices={wl.n_devices}|".encode())
+    for a in wl.example_args():
+        h.update(_arg_signature(a).encode())
+        h.update(b";")
+    h.update(fn_token(wl.fn).encode())
+    return h.hexdigest()[:32]
+
+
+# ---------------------------------------------------------------------------
+# The store
+# ---------------------------------------------------------------------------
+
+
+class ArtifactStore:
+    """Disk-backed map fingerprint -> Events (one JSON file per entry).
+
+    ``hits`` / ``misses`` / ``puts`` / ``dropped_corrupt`` are exposed for
+    tests and cost accounting.  All operations tolerate concurrent writers:
+    puts go through a temp file + ``os.replace``, and any file that fails to
+    parse is removed and reported as a miss.
+    """
+
+    def __init__(self, cache_dir: Optional[str] = None) -> None:
+        self.cache_dir = cache_dir or _default_dir()
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.dropped_corrupt = 0
+
+    def path_for(self, fingerprint: str) -> str:
+        return os.path.join(self.cache_dir, f"{fingerprint}.json")
+
+    def get(self, fingerprint: str) -> Optional[Events]:
+        path = self.path_for(fingerprint)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("version") != STORE_VERSION:
+                raise ValueError(f"store version {payload.get('version')}")
+            ev = Events.from_dict(payload["events"])
+        except FileNotFoundError:
+            self.misses += 1
+            return None
+        except (ValueError, KeyError, TypeError, OSError):
+            # corrupt / truncated / stale-format entry: drop it and recompile
+            self.dropped_corrupt += 1
+            self.misses += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+        self.hits += 1
+        return ev
+
+    def put(self, fingerprint: str, events: Events, *, workload: str = "") -> str:
+        os.makedirs(self.cache_dir, exist_ok=True)
+        path = self.path_for(fingerprint)
+        payload = {
+            "version": STORE_VERSION,
+            "fingerprint": fingerprint,
+            "workload": workload,
+            "events": events.to_dict(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f)
+            os.replace(tmp, path)  # atomic vs concurrent readers/writers
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        self.puts += 1
+        return path
+
+    def entries(self) -> Dict[str, str]:
+        """fingerprint -> workload name for every readable entry."""
+        out: Dict[str, str] = {}
+        try:
+            names = os.listdir(self.cache_dir)
+        except OSError:
+            return out
+        for fname in sorted(names):
+            if not fname.endswith(".json"):
+                continue
+            try:
+                with open(os.path.join(self.cache_dir, fname)) as f:
+                    payload = json.load(f)
+                out[payload["fingerprint"]] = payload.get("workload", "")
+            except (ValueError, KeyError, OSError):
+                continue
+        return out
+
+    def clear(self) -> int:
+        """Delete every entry; returns the number of files removed."""
+        n = 0
+        try:
+            names = os.listdir(self.cache_dir)
+        except OSError:
+            return 0
+        for fname in names:
+            if fname.endswith(".json"):
+                try:
+                    os.remove(os.path.join(self.cache_dir, fname))
+                    n += 1
+                except OSError:
+                    pass
+        return n
+
+    def __repr__(self) -> str:
+        return (
+            f"ArtifactStore({self.cache_dir!r}, hits={self.hits}, "
+            f"misses={self.misses}, puts={self.puts})"
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _store_for(cache_dir: str) -> ArtifactStore:
+    return ArtifactStore(cache_dir)
+
+
+def default_store() -> ArtifactStore:
+    """Process-wide store for the default cache dir.
+
+    Resolves ``$REPRO_ARTIFACT_DIR`` at *call* time (one memoized store per
+    directory), so tests can point the default store at a temp dir.
+    """
+    return _store_for(_default_dir())

@@ -145,6 +145,13 @@ class CollectiveStats:
     def total_count(self) -> int:
         return sum(self.count_by_kind.values())
 
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CollectiveStats":
+        return cls(
+            bytes_by_kind={k: float(v) for k, v in (d.get("bytes_by_kind") or {}).items()},
+            count_by_kind={k: int(v) for k, v in (d.get("count_by_kind") or {}).items()},
+        )
+
 
 def parse_collectives(hlo_text: str) -> CollectiveStats:
     """Sum operand sizes of every collective op in (post-SPMD) HLO text."""
@@ -291,6 +298,27 @@ class Events:
         }
         d["vectorizable_fraction"] = self.vectorizable_fraction
         return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Events":
+        """Inverse of :meth:`to_dict` (the artifact store's JSON round-trip).
+
+        Derived keys (``vectorizable_fraction``) and unknown keys from newer
+        writers are ignored; missing fields keep their defaults, so stored
+        events written by older code still load.
+        """
+        ev = cls()
+        valid = {f.name for f in dataclasses.fields(cls)}
+        for k, v in d.items():
+            if k == "collectives":
+                ev.collectives = CollectiveStats.from_dict(v or {})
+            elif k == "census":
+                ev.census = {str(n): int(c) for n, c in (v or {}).items()}
+            elif k == "while_trip_counts":
+                ev.while_trip_counts = list(v or [])
+            elif k in valid:
+                setattr(ev, k, type(getattr(ev, k))(v))
+        return ev
 
 
 def _cost_get(cost: Any, key: str) -> float:

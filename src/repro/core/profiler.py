@@ -73,6 +73,15 @@ class Profiler:
         self._repeats += 1
         self._t0 = None
 
+    def mean_roi_s(self) -> float:
+        """Mean wall-clock seconds per measured ROI repeat so far.
+
+        Public accessor for the accumulated start/stop timings (0.0 before
+        any completed repeat) — callers should use this instead of reaching
+        into the accumulator fields.
+        """
+        return self._acc / max(self._repeats, 1)
+
     def record(self, name: str, events: Events, chip_clock_hz: float = 3.447e9) -> Measurement:
         """Attach artifact counters to the timed ROI and store the result.
 
@@ -89,7 +98,7 @@ class Profiler:
         }
         m = Measurement(
             name=name,
-            wall_s=self._acc / max(self._repeats, 1),
+            wall_s=self.mean_roi_s(),
             counters=counters,
             repeats=self._repeats,
         )

@@ -61,6 +61,16 @@ class KernelOps:
         kw["interpret"] = True
         return self._jit(*args, **kw)
 
+    def lower(self, *args: Any, **kw: Any):
+        """AOT-lower the (interpret-mode by default) jitted kernel.
+
+        Exposing ``lower`` lets the analysis pipeline compile a kernel
+        workload directly instead of re-wrapping it in ``jax.jit`` — which
+        would turn the static arguments into tracers.
+        """
+        kw.setdefault("interpret", True)
+        return self._jit.lower(*args, **kw)
+
     def ref(self, *args: Any, **kw: Any):
         if self._ref is None:
             raise NotImplementedError(f"kernel {self.name!r} has no ref oracle")

@@ -41,11 +41,14 @@ def run_one(arch: str, shape: str, mesh_kind: str, baseline: bool, out_dir: str)
     result = cells_mod.analyze_cell(cell, mesh, compiled)
     result["compile_s"] = t1 - t0
     result["baseline"] = baseline
-    tag = "base" if baseline else "opt"
-    fname = f"{arch}__{shape}__{mesh_kind}__{tag}.json".replace("/", "_")
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, fname), "w") as f:
+    # atomic write: --skip-existing trusts file existence, so an interrupted
+    # dump must never leave a truncated artifact behind
+    path = _cell_artifact(out_dir, arch, shape, mesh_kind, baseline)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(result, f, indent=1)
+    os.replace(tmp, path)
     print(f"[ok] {arch} x {shape} x {mesh_kind} "
           f"compile={result['compile_s']:.1f}s "
           f"dominant={result['roofline']['dominant']} "
@@ -67,8 +70,25 @@ def all_cells():
     return out
 
 
-def drive_all(jobs: int, baseline: bool, out_dir: str, mesh_filter=None) -> int:
+def _cell_artifact(out_dir: str, arch: str, shape: str, mesh_kind: str,
+                   baseline: bool) -> str:
+    tag = "base" if baseline else "opt"
+    fname = f"{arch}__{shape}__{mesh_kind}__{tag}.json".replace("/", "_")
+    return os.path.join(out_dir, fname)
+
+
+def drive_all(jobs: int, baseline: bool, out_dir: str, mesh_filter=None,
+              skip_existing: bool = False) -> int:
     todo = [c for c in all_cells() if mesh_filter is None or c[2] == mesh_filter]
+    if skip_existing:
+        kept = []
+        for c in todo:
+            path = _cell_artifact(out_dir, c[0], c[1], c[2], baseline)
+            if os.path.exists(path):
+                print(f"[skip] {c}: artifact exists ({path})")
+            else:
+                kept.append(c)
+        todo = kept
     procs = {}
     failed, done = [], 0
     env = dict(os.environ)
@@ -113,7 +133,11 @@ def main():
                     help="paper-faithful baseline RunConfig instead of optimized")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--list", action="store_true")
-    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="concurrent compile subprocesses for --all")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="with --all: skip cells whose analysis JSON already "
+                         "exists in --out-dir (persistent artifact reuse)")
     ap.add_argument("--out-dir", default=OUT_DIR)
     args = ap.parse_args()
 
@@ -122,7 +146,8 @@ def main():
             print(*c)
         return 0
     if args.all:
-        return drive_all(args.jobs, args.baseline, args.out_dir)
+        return drive_all(args.jobs, args.baseline, args.out_dir,
+                         skip_existing=args.skip_existing)
     try:
         run_one(args.arch, args.shape, args.mesh, args.baseline, args.out_dir)
         return 0

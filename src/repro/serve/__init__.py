@@ -1,1 +1,27 @@
-from repro.serve.engine import Request, ServeEngine  # noqa: F401
+"""Serving layer: the batched decode engine and the analysis service.
+
+All exports resolve lazily (PEP 562): the analysis service — which needs
+only ``repro.analysis`` — doesn't pay the transformer-stack import on
+startup, and ``python -m repro.serve.analysis_service`` doesn't double-load
+its own module through the package import.
+"""
+
+_LAZY_EXPORTS = {
+    "Request": "repro.serve.engine",
+    "ServeEngine": "repro.serve.engine",
+    "AnalysisRequest": "repro.serve.analysis_service",
+    "AnalysisService": "repro.serve.analysis_service",
+}
+
+
+def __getattr__(name):
+    mod_name = _LAZY_EXPORTS.get(name)
+    if mod_name is not None:
+        import importlib
+
+        return getattr(importlib.import_module(mod_name), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY_EXPORTS))

@@ -1,7 +1,17 @@
 """Shared fixtures. Tests run on the single host CPU device (never set
-xla_force_host_platform_device_count here — the dry-run owns that knob)."""
+xla_force_host_platform_device_count here — the dry-run owns that knob).
+
+The default artifact store is pointed at a fresh temp dir so test runs
+never read a developer's ~/.cache entries (which would turn compile-count
+assertions stale) and never pollute it.  Store tests that exercise
+cross-process persistence manage their own dirs via ``REPRO_ARTIFACT_DIR``.
+"""
 
 import dataclasses
+import os
+import tempfile
+
+os.environ["REPRO_ARTIFACT_DIR"] = tempfile.mkdtemp(prefix="repro-artifacts-")
 
 import jax
 import pytest

@@ -1,0 +1,167 @@
+"""AnalysisService: queue/wave serving of the SVE pipeline (repro.serve).
+
+Mirrors the ServeEngine contracts: submissions drain in waves of
+``max_batch``, all waves share one ArtifactCache (same-workload requests
+dedupe to one compile), errors are captured per request, and the drain
+report is machine-readable JSON.
+"""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import ArtifactCache, Workload, analyze
+from repro.core import hw
+from repro.core.decision_tree import PerfClass
+from repro.serve.analysis_service import AnalysisRequest, AnalysisService, main
+
+
+def test_service_drains_in_waves_and_matches_direct_analyze():
+    svc = AnalysisService(max_batch=2, cache=ArtifactCache())
+    names = ["kernel/gemm", "kernel/spmv", "kernel/stream-triad"]
+    reqs = [svc.submit(n, chips=("grace-core",)) for n in names]
+    assert [r.uid for r in reqs] == [0, 1, 2]
+    completed = svc.run_until_drained()
+    assert svc.waves == 2  # 3 requests / max_batch 2
+    assert set(completed) == {0, 1, 2}
+    for req, name in zip(reqs, names):
+        assert req.done and req.error is None
+        assert len(req.results) == 1
+        direct = analyze(name, hw.GRACE_CORE)
+        assert req.results[0].to_dict() == direct.to_dict()
+
+
+def test_service_request_sweeps_chips_and_dtypes():
+    svc = AnalysisService(cache=ArtifactCache())
+    req = svc.submit("kernel/stream-triad", chips=("grace-core",),
+                     dtypes=("fp64", "fp32", "fp16"))
+    svc.run_until_drained()
+    assert [r.vb for r in req.results] == [2.0, 4.0, 8.0]  # the ELEN sweep
+
+
+def test_same_workload_across_requests_compiles_once():
+    a = jnp.ones((48, 48), jnp.float32)
+    wl = Workload(name="svc-shared", fn=lambda x: x @ x, args=(a,))
+    cache = ArtifactCache()
+    svc = AnalysisService(max_batch=8, jobs=4, cache=cache)
+    for chips in (("grace-core",), ("tpu-v5e",), ("grace-socket",)):
+        svc.submit(wl, chips=chips, source="compiled")
+    svc.run_until_drained()
+    assert cache.compiles == 1  # single-flight across the whole wave
+    assert all(len(r.results) == 1 for r in svc.completed.values())
+
+
+def test_compile_failure_is_captured_not_fatal():
+    """A workload that blows up at trace time fails ITS request only."""
+    a = jnp.ones((8, 8), jnp.float32)
+
+    def boom(x):
+        raise RuntimeError("trace failure")
+
+    svc = AnalysisService(cache=ArtifactCache())
+    bad = svc.submit(Workload(name="svc-bad", fn=boom, args=(a,)),
+                     source="compiled")
+    ok = svc.submit("kernel/gemm")
+    svc.run_until_drained()
+    assert bad.done and bad.error and "trace failure" in bad.error
+    assert bad.results == []
+    assert ok.error is None and ok.results[0].perf_class == PerfClass.SPEEDUP
+    assert svc.report()["service"]["errors"] == 1
+
+
+def test_failing_lazy_builder_is_captured_not_fatal():
+    """A registered workload whose lazy builder raises fails only its own
+    request; the rest of the wave drains."""
+    from repro.analysis import register_lazy
+
+    def broken_builder():
+        raise RuntimeError("builder exploded")
+
+    register_lazy("test/broken-builder", broken_builder, replace=True)
+    svc = AnalysisService(cache=ArtifactCache())
+    bad = svc.submit("test/broken-builder")
+    ok = svc.submit("kernel/gemm")
+    svc.run_until_drained()
+    assert bad.done and bad.error and "builder exploded" in bad.error
+    assert ok.error is None and ok.results[0].perf_class == PerfClass.SPEEDUP
+
+
+def test_unknown_workload_and_chip_are_captured_not_raised():
+    svc = AnalysisService(cache=ArtifactCache())
+    bad_wl = svc.submit("kernel/nope")
+    bad_chip = svc.submit("kernel/gemm", chips=("warp-core",))
+    ok = svc.submit("kernel/gemm")
+    svc.run_until_drained()
+    assert bad_wl.error and "unknown workload" in bad_wl.error
+    assert bad_chip.error and "unknown chip" in bad_chip.error
+    assert ok.error is None and ok.results[0].perf_class == PerfClass.SPEEDUP
+    report = svc.report()
+    assert report["service"]["errors"] == 2
+    assert report["service"]["requests"] == 3
+
+
+def test_report_is_json_serializable_trajectory_point():
+    svc = AnalysisService(max_batch=4, jobs=2, cache=ArtifactCache())
+    svc.submit("kernel/gemm", chips=("grace-core", "tpu-v5e"))
+    svc.run_until_drained()
+    report = json.loads(json.dumps(svc.report()))
+    assert report["kind"] == "analysis_service_report"
+    svc_stats = report["service"]
+    for key in ("requests", "cells", "waves", "wall_s", "compiles",
+                "store_hits", "jobs", "errors"):
+        assert key in svc_stats
+    assert svc_stats["cells"] == 2
+    rows = report["requests"][0]["results"]
+    assert rows[0]["workload"] == "kernel/gemm"
+    assert {r["chip"] for r in rows} == {"grace-core", "tpu-v5e"}
+
+
+def test_parallel_wave_matches_serial_wave():
+    names = ["kernel/gemm", "kernel/spmv", "kernel/jacobi2d"]
+
+    def drain(jobs):
+        svc = AnalysisService(max_batch=8, jobs=jobs, cache=ArtifactCache())
+        for n in names:
+            svc.submit(n, chips=("grace-core", "grace-socket"))
+        svc.run_until_drained()
+        return [r.to_dict() for req in svc.completed.values()
+                for r in req.results]
+
+    serial, parallel = drain(1), drain(4)
+    assert parallel == serial
+
+
+def test_resubmitting_request_object_gets_fresh_uid():
+    svc = AnalysisService(cache=ArtifactCache())
+    req = AnalysisRequest(uid=-1, workload="kernel/gemm")
+    out = svc.submit(req)
+    assert out is req and req.uid == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_emits_json_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    rc = main(["--workloads", "kernel/gemm", "kernel/stream-triad",
+               "--chips", "grace-core", "--no-store", "--jobs", "2",
+               "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["service"]["requests"] == 2
+    table = capsys.readouterr().err
+    assert "kernel/gemm" in table  # the human-readable table went to stderr
+
+
+def test_cli_rejects_unknown_workload(capsys):
+    rc = main(["--workloads", "kernel/nope", "--no-store"])
+    assert rc == 2
+    assert "unknown workloads" in capsys.readouterr().err
+
+
+def test_cli_list(capsys):
+    assert main(["--list"]) == 0
+    assert "kernel/gemm" in capsys.readouterr().out

@@ -1,0 +1,293 @@
+"""The persistent artifact store (repro.analysis.store) + parallel sweeps.
+
+ISSUE-2 contracts: fingerprints are stable across processes (same workload
+-> store hit; changed shape/dtype/body -> miss), corrupt cache files are
+recovered from (dropped + recompiled, never raised), and a parallel
+``analyze_sweep(jobs>1)`` performs exactly one compile per unique workload
+while returning results identical to the serial path.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    ArtifactCache,
+    ArtifactStore,
+    Workload,
+    analyze,
+    analyze_sweep,
+    workload_fingerprint,
+)
+from repro.analysis.store import fn_token
+from repro.core import hw
+from repro.core.counters import Events, events_from_analytic
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mm_workload(shape=(64, 64), dtype=jnp.float32, name="store-mm"):
+    a = jnp.ones(shape, dtype)
+    return Workload(name=name, fn=lambda x: x @ x, args=(a,), dtype="fp32")
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_for_identical_workloads():
+    assert workload_fingerprint(_mm_workload()) == workload_fingerprint(_mm_workload())
+
+
+def test_fingerprint_changes_with_shape_dtype_body_and_defaults():
+    base = workload_fingerprint(_mm_workload())
+    assert workload_fingerprint(_mm_workload(shape=(32, 64))) != base
+    assert workload_fingerprint(_mm_workload(dtype=jnp.bfloat16)) != base
+    a = jnp.ones((64, 64), jnp.float32)
+    other_body = Workload(name="store-mm", fn=lambda x: x + x, args=(a,))
+    assert workload_fingerprint(other_body) != base
+    # default-argument values are behavior too
+    d1 = Workload(name="store-mm", fn=lambda x, k=1.0: x * k, args=(a,))
+    d2 = Workload(name="store-mm", fn=lambda x, k=2.0: x * k, args=(a,))
+    assert workload_fingerprint(d1) != workload_fingerprint(d2)
+
+
+def test_fn_token_sees_through_jit_and_closures():
+    def make(scale):
+        return lambda x: x * scale
+
+    assert fn_token(make(2.0)) != fn_token(make(3.0))  # closure value differs
+    f = lambda x: x + 1  # noqa: E731
+    assert fn_token(jax.jit(f)) == fn_token(jax.jit(f))  # __wrapped__ path
+
+
+def test_fingerprint_sees_captured_array_shape_and_dtype():
+    """Large-array reprs elide shape/dtype, so captured arrays must token
+    by abstract signature — different captures must not share events."""
+    a = jnp.ones((16,), jnp.float32)
+
+    def make(w):
+        return Workload(name="cap", fn=lambda x: x + w, args=(a,))
+
+    base = workload_fingerprint(make(jnp.zeros((2000,), jnp.float32)))
+    assert workload_fingerprint(make(jnp.zeros((4000,), jnp.float32))) != base
+    assert workload_fingerprint(make(jnp.zeros((2000,), jnp.bfloat16))) != base
+    assert workload_fingerprint(make(jnp.zeros((2000,), jnp.float32))) == base
+
+
+def test_fingerprint_of_partial_bound_callables_and_arrays():
+    """functools.partial args route through value tokens: bound callables
+    must not embed memory addresses, bound arrays must carry shape/dtype."""
+    import functools
+
+    a = jnp.ones((16,), jnp.float32)
+
+    def step(op, x):
+        return op(x)
+
+    def double(x):
+        return x * 2
+
+    def triple(x):
+        return x * 3
+
+    wl_d = Workload(name="part", fn=functools.partial(step, double), args=(a,))
+    wl_t = Workload(name="part", fn=functools.partial(step, triple), args=(a,))
+    assert workload_fingerprint(wl_d) != workload_fingerprint(wl_t)
+    # same bound callable -> stable (no process-local id in the token)
+    wl_d2 = Workload(name="part", fn=functools.partial(step, double), args=(a,))
+    assert workload_fingerprint(wl_d) == workload_fingerprint(wl_d2)
+
+    def scale(w, x):
+        return x * w.sum()
+
+    p1 = Workload(name="part", fn=functools.partial(scale, jnp.zeros((2000,))),
+                  args=(a,))
+    p2 = Workload(name="part", fn=functools.partial(scale, jnp.zeros((4000,))),
+                  args=(a,))
+    assert workload_fingerprint(p1) != workload_fingerprint(p2)
+
+
+def test_cache_memory_keyed_by_content_not_object_identity():
+    """Two equal-content Workload objects share one in-memory entry (and
+    the cache never pins the request objects themselves)."""
+    cache = ArtifactCache()
+    analyze(_mm_workload(), hw.GRACE_CORE, cache=cache)
+    analyze(_mm_workload(), hw.GRACE_CORE, cache=cache)  # fresh object
+    assert cache.compiles == 1 and cache.hits == 1
+
+
+def test_fingerprint_cross_process_stability(tmp_path):
+    """The same source in a fresh interpreter yields the same fingerprint."""
+    script = (
+        "import jax.numpy as jnp\n"
+        "from repro.analysis import Workload, workload_fingerprint\n"
+        "a = jnp.ones((64, 64), jnp.float32)\n"
+        "wl = Workload(name='store-mm', fn=lambda x: x @ x, args=(a,), dtype='fp32')\n"
+        "print(workload_fingerprint(wl))\n"
+    )
+    env = {**os.environ, "PYTHONPATH": "src"}
+    fps = [
+        subprocess.run(
+            [sys.executable, "-c", script], capture_output=True, text=True,
+            env=env, cwd=REPO_ROOT, check=True,
+        ).stdout.strip()
+        for _ in range(2)
+    ]
+    assert fps[0] == fps[1]
+    assert fps[0] == workload_fingerprint(_mm_workload())
+
+
+# ---------------------------------------------------------------------------
+# store round-trip + corrupt recovery
+# ---------------------------------------------------------------------------
+
+
+def test_events_json_round_trip():
+    ev = events_from_analytic(flops=1e9, hbm_bytes=1e6, gather_bytes=3e4,
+                              collective_bytes=2e5, n_devices=4)
+    ev.nonvec_flops = 1e8
+    ev.census = {"dot": 3}
+    ev.while_trip_counts = [8, 8]
+    back = Events.from_dict(json.loads(json.dumps(ev.to_dict())))
+    assert back.to_dict() == ev.to_dict()
+    assert back.vectorizable_fraction == ev.vectorizable_fraction
+
+
+def test_store_put_get_and_stats(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    ev = events_from_analytic(flops=2.0, hbm_bytes=4.0)
+    assert store.get("feedface") is None and store.misses == 1
+    path = store.put("feedface", ev, workload="w")
+    assert os.path.exists(path)
+    got = store.get("feedface")
+    assert got is not None and got.flops == 2.0
+    assert store.hits == 1 and store.puts == 1
+    assert store.entries() == {"feedface": "w"}
+    assert store.clear() == 1
+
+
+@pytest.mark.parametrize("garbage", ["{not json", '{"version": 99}', ""])
+def test_corrupt_cache_file_recovered(tmp_path, garbage):
+    """A corrupt/truncated/stale entry is dropped and recompiled, not raised."""
+    store = ArtifactStore(str(tmp_path))
+    wl = _mm_workload()
+    fp = workload_fingerprint(wl)
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(store.path_for(fp), "w") as f:
+        f.write(garbage)
+    cache = ArtifactCache(store=store)
+    result = analyze(wl, hw.GRACE_CORE, cache=cache)
+    assert result.events.flops >= 2 * 64**3  # recompiled, correct events
+    assert cache.compiles == 1 and store.dropped_corrupt == 1
+    # ... and the recompile healed the store for the next reader
+    fresh = ArtifactCache(store=ArtifactStore(str(tmp_path)))
+    analyze(_mm_workload(), hw.GRACE_CORE, cache=fresh)
+    assert fresh.compiles == 0 and fresh.store_hits == 1
+
+
+def test_cache_accepts_directory_path_string_as_store(tmp_path):
+    """ArtifactCache(store=<str>) means a cache directory, like --store-dir."""
+    first = ArtifactCache(store=str(tmp_path))
+    analyze(_mm_workload(), hw.GRACE_CORE, cache=first)
+    assert first.compiles == 1 and len(first.store.entries()) == 1
+    again = ArtifactCache(store=str(tmp_path))
+    analyze(_mm_workload(), hw.GRACE_CORE, cache=again)
+    assert again.compiles == 0 and again.store_hits == 1
+
+
+def test_store_hit_matches_compiled_events(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    first = ArtifactCache(store=store)
+    r1 = analyze(_mm_workload(), hw.GRACE_CORE, cache=first)
+    second = ArtifactCache(store=store)
+    r2 = analyze(_mm_workload(), hw.GRACE_CORE, cache=second)
+    assert second.compiles == 0 and second.store_hits == 1
+    assert r2.to_dict() == r1.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# cross-process: second analyze_sweep performs zero compiles
+# ---------------------------------------------------------------------------
+
+
+_SWEEP_SCRIPT = """
+import json
+from repro.analysis import ArtifactCache, analyze_sweep
+from repro.core import hw
+cache = ArtifactCache(store="default")
+results = analyze_sweep(["kernel/gemm", "kernel/stream-triad"],
+                        chips=(hw.GRACE_CORE, hw.TPU_V5E),
+                        source="compiled", cache=cache)
+print(json.dumps({"compiles": cache.compiles, "store_hits": cache.store_hits,
+                  "cells": len(results),
+                  "classes": [int(r.perf_class) for r in results]}))
+"""
+
+
+def test_second_sweep_process_performs_zero_compiles(tmp_path):
+    """The headline acceptance: a fresh process over the kernel workloads
+    gets every artifact from the store."""
+    env = {**os.environ, "PYTHONPATH": "src",
+           "REPRO_ARTIFACT_DIR": str(tmp_path)}
+    runs = []
+    for _ in range(2):
+        proc = subprocess.run(
+            [sys.executable, "-c", _SWEEP_SCRIPT], capture_output=True,
+            text=True, env=env, cwd=REPO_ROOT, check=True, timeout=300,
+        )
+        runs.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    assert runs[0]["compiles"] == 2 and runs[0]["store_hits"] == 0
+    assert runs[1]["compiles"] == 0 and runs[1]["store_hits"] == 2
+    assert runs[0]["cells"] == runs[1]["cells"] == 4
+    assert runs[0]["classes"] == runs[1]["classes"]  # store hit == recompute
+
+
+# ---------------------------------------------------------------------------
+# parallel sweeps
+# ---------------------------------------------------------------------------
+
+
+def _parallel_workloads(n=3):
+    a = jnp.ones((48, 48), jnp.float32)
+    return [
+        Workload(name=f"par-{i}", fn=lambda x, k=float(i): x @ x + k, args=(a,))
+        for i in range(n)
+    ]
+
+
+def test_parallel_sweep_compiles_once_per_unique_workload():
+    """jobs=4 over 3 workloads x 2 chips: single-flight keeps compiles == 3."""
+    wls = _parallel_workloads()
+    cache = ArtifactCache()  # memory-only: isolates the single-flight claim
+    results = analyze_sweep(
+        wls, chips=(hw.GRACE_CORE, hw.TPU_V5E), source="compiled",
+        cache=cache, jobs=4,
+    )
+    assert len(results) == 6
+    assert cache.compiles == len(wls)
+    assert cache.compiles + cache.hits == 6
+
+
+def test_parallel_sweep_matches_serial_results():
+    wls = _parallel_workloads()
+    serial = analyze_sweep(wls, chips=(hw.GRACE_CORE, hw.GRACE_SOCKET),
+                           source="compiled", cache=ArtifactCache())
+    parallel = analyze_sweep(wls, chips=(hw.GRACE_CORE, hw.GRACE_SOCKET),
+                             source="compiled", cache=ArtifactCache(), jobs=4)
+    assert [r.to_dict() for r in parallel] == [r.to_dict() for r in serial]
+
+
+def test_parallel_sweep_with_store_still_single_flight(tmp_path):
+    wls = _parallel_workloads()
+    cache = ArtifactCache(store=ArtifactStore(str(tmp_path)))
+    analyze_sweep(wls, chips=(hw.GRACE_CORE, hw.TPU_V5E), source="compiled",
+                  cache=cache, jobs=4)
+    assert cache.compiles == len(wls)
+    assert len(cache.store.entries()) == len(wls)  # one JSON per workload

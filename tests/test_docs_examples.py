@@ -1,0 +1,58 @@
+"""Execute every ```python block in the user-facing docs.
+
+The ISSUE-2 contract: documented snippets cannot drift from the API.  Each
+doc's blocks run top-to-bottom in one shared namespace (so later blocks may
+use names defined earlier, exactly as a reader would paste them).  Blocks
+fenced as ```bash (or any non-python language) are ignored; a block
+preceded by an HTML comment containing ``no-doctest`` is skipped.
+"""
+
+import pathlib
+import re
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+DOCS = [
+    "README.md",
+    "docs/METHOD.md",
+    "docs/ARCHITECTURE.md",
+]
+
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+_SKIP_MARK = "no-doctest"
+
+
+def python_blocks(text: str):
+    """(start_line, source) for every executable ```python block."""
+    out = []
+    for m in _BLOCK_RE.finditer(text):
+        preceding = text[: m.start()].rstrip().rsplit("\n", 1)[-1]
+        if _SKIP_MARK in preceding and preceding.lstrip().startswith("<!--"):
+            continue
+        line = text[: m.start()].count("\n") + 2  # first line inside fence
+        out.append((line, m.group(1)))
+    return out
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_doc_python_blocks_execute(doc):
+    path = REPO_ROOT / doc
+    assert path.exists(), f"{doc} missing"
+    blocks = python_blocks(path.read_text())
+    assert blocks, f"{doc} has no ```python blocks to verify"
+    ns: dict = {"__name__": f"doctest_{path.stem}"}
+    for line, src in blocks:
+        code = compile(src, f"{doc}:{line}", "exec")
+        try:
+            exec(code, ns)  # noqa: S102 — executing our own documentation
+        except Exception as e:
+            pytest.fail(f"{doc} block at line {line} failed: {e!r}")
+
+
+def test_readme_links_docs():
+    """README's repo map must point at both method/architecture docs."""
+    readme = (REPO_ROOT / "README.md").read_text()
+    assert "docs/METHOD.md" in readme
+    assert "docs/ARCHITECTURE.md" in readme

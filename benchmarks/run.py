@@ -3,15 +3,20 @@
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig3_vectorization]
     PYTHONPATH=src python -m benchmarks.run --out experiments/bench --jobs 4
+    PYTHONPATH=src python -m benchmarks.run --tune [--tune-cap 2]
     PYTHONPATH=src python -m benchmarks.run --list
 
 Writes one CSV per benchmark, a machine-readable ``summary.json`` (per-
 benchmark rows / wall time / pass-fail — the stable artifact for perf
 trajectory tracking), and prints each table.  ``--jobs N`` runs benchmarks
 concurrently on a thread pool (each benchmark's analyses share the
-persistent artifact store, so repeat runs skip compilation).  ``--list``
-enumerates both the figure/table benchmarks and every workload registered
-in the unified ``repro.analysis`` registry.
+persistent artifact store, so repeat runs skip compilation).  ``--tune``
+runs the roofline-guided kernel autotuner first (records persist in the
+tuning store — a repeat run performs zero timing runs) and writes its
+machine-readable report to ``<out>/tuning.json``; ``--tune-cap N`` shrinks
+every tuning axis to its first N values (the CI tiny-space knob).
+``--list`` enumerates both the figure/table benchmarks and every workload
+registered in the unified ``repro.analysis`` registry.
 """
 
 from __future__ import annotations
@@ -64,6 +69,25 @@ def _list() -> int:
     return 0
 
 
+def _run_tuning(out_dir: str, *, jobs: int, cap=None, repeats: int = 2) -> None:
+    """Roofline-guided sweep over every tunable kernel -> tuning.json.
+
+    Runs before the benchmarks so tuned configs are active for them; store
+    hits make repeat invocations timing-free.
+    """
+    from repro.tuning import format_records, report_dict, tune_kernels
+
+    t0 = time.time()
+    records = tune_kernels(jobs=jobs, cap=cap, repeats=repeats)
+    print("\n== tuning " + "=" * 60)
+    print(format_records(records))
+    path = os.path.join(out_dir, "tuning.json")
+    with open(path, "w") as f:
+        json.dump(report_dict(records, wall_s=time.time() - t0), f, indent=1)
+    cached = sum(1 for r in records if r.cached)
+    print(f"[{len(records)} tuning records ({cached} cached) -> {path}]")
+
+
 def _run_benchmark(name: str, fn) -> dict:
     """Execute one benchmark; never raises (summary rows record failures)."""
     t0 = time.time()
@@ -88,6 +112,12 @@ def main(argv=None) -> int:
                     help="list benchmarks + registered workloads and exit")
     ap.add_argument("--jobs", type=int, default=1,
                     help="run benchmarks concurrently on a thread pool")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the kernel autotuner first; writes tuning.json")
+    ap.add_argument("--tune-cap", type=int, default=None,
+                    help="shrink tuning axes to their first N values")
+    ap.add_argument("--tune-repeats", type=int, default=2,
+                    help="timing repeats per tuning survivor (best-of)")
     ap.add_argument("--out", default="experiments/bench")
     args = ap.parse_args(argv)
 
@@ -102,6 +132,9 @@ def main(argv=None) -> int:
         return 2
 
     os.makedirs(args.out, exist_ok=True)
+    if args.tune:
+        _run_tuning(args.out, jobs=args.jobs, cap=args.tune_cap,
+                    repeats=args.tune_repeats)
     todo = {args.only: ALL[args.only]} if args.only else ALL
     t_total = time.time()
     if args.jobs > 1 and len(todo) > 1:

@@ -1,7 +1,8 @@
-"""Unified Workload API + one-call SVE analysis pipeline.
+"""Unified Workload API + one-call SVE analysis pipeline (paper Sec. 3).
 
-The paper's end-to-end method — PMU events -> Eq. 1 metrics (VB, R_ins) ->
-adapted roofline (Eq. 2) -> Fig. 8 decision tree — behind two entry points:
+The paper's end-to-end method — PMU events (Sec. 3.1 / Table 1) -> Eq. 1
+metrics (VB, R_ins) -> adapted roofline (Eq. 2) -> Fig. 8 decision tree —
+behind two entry points:
 
 * :func:`workload` / :class:`Workload` — describe a unit of work once
   (callable + example args + dtype + optional analytic cost model) and
@@ -18,6 +19,9 @@ adapted roofline (Eq. 2) -> Fig. 8 decision tree — behind two entry points:
     print(analyze("kernel/gemm").table())
     for name in list_workloads():
         print(analyze(name))
+
+Kernel workloads also surface the roofline-guided autotuner's outlook
+(``SVEAnalysis.tuning``); see :mod:`repro.tuning` and ``docs/TUNING.md``.
 """
 
 from repro.analysis.workload import (  # noqa: F401

@@ -1,10 +1,13 @@
 """One-call SVE analysis pipeline: Workload -> SVEAnalysis.
 
-``analyze(workload)`` chains the paper's whole method — PMU-analogue event
-extraction (``core.counters``), Eq. 1 metrics (VB, R_ins, AI), the adapted
-roofline (Eq. 2) and the Fig. 8 decision tree — into a single call that
-returns a typed, serializable report.  Callers never wire counters /
-metrics / roofline / decision_tree by hand again.
+Implements the paper's end-to-end method (Sec. 3): ``analyze(workload)``
+chains PMU-analogue event extraction (``core.counters``, paper Sec. 3.1 /
+Table 1), Eq. 1 metrics (VB, R_ins, AI — Sec. 3.3), the adapted roofline
+(Eq. 2) and the Fig. 8 decision tree into a single call that returns a
+typed, serializable report.  Callers never wire counters / metrics /
+roofline / decision_tree by hand again.  Kernel workloads additionally
+carry the autotuner's tuned-vs-default outlook (``SVEAnalysis.tuning``,
+see :mod:`repro.tuning`).
 
 Event sources (``source=``):
 
@@ -164,7 +167,13 @@ DEFAULT_CACHE = ArtifactCache(store=DEFAULT_STORE)
 
 @dataclasses.dataclass(frozen=True)
 class SVEAnalysis:
-    """Everything the paper derives about one workload on one chip model."""
+    """Everything the paper derives about one workload on one chip model.
+
+    ``tuning`` (kernel workloads only) is the autotuner's analytic outlook:
+    the default vs roofline-best block config, the predicted tuned-vs-
+    default speedup, and — when the tuning store already holds a record for
+    this (kernel, chip, dtype) — the persisted winning config.
+    """
 
     workload: str
     chip: str
@@ -175,6 +184,7 @@ class SVEAnalysis:
     roofline: AdaptedRoofline
     decision: Decision
     wall_s: Optional[float] = None
+    tuning: Optional[Dict[str, Any]] = None
 
     # -- the paper's headline quantities, flattened -------------------------
     @property
@@ -228,6 +238,7 @@ class SVEAnalysis:
             "wall_s": self.wall_s,
             "events": self.events.to_dict(),
             "roofline": dataclasses.asdict(self.roofline),
+            "tuning": self.tuning,
         }
 
     def to_json(self, **kw: Any) -> str:
@@ -246,6 +257,10 @@ class SVEAnalysis:
             "bound": self.bound,
             "class": f"{int(self.perf_class)} {self.perf_class.name}",
             "speedup_pred": f"{self.predicted_speedup:.3g}",
+            "tuned": (
+                "" if not self.tuning
+                else f"{self.tuning['predicted_speedup']:.3g}x"
+            ),
             "wall_s": "" if self.wall_s is None else f"{self.wall_s:.5f}",
         }
 
@@ -304,6 +319,26 @@ def _report_from_events(
     )
 
 
+def _tuning_outlook(
+    wl: Workload, chip: hw.ChipSpec, dtype: str
+) -> Optional[Dict[str, Any]]:
+    """Autotuner outlook for kernel workloads (model + store lookup only —
+    never compiles or times; never raises into the analysis)."""
+    if not wl.name.startswith("kernel/"):
+        return None
+    try:
+        from repro.kernels.registry import KERNELS
+
+        ops = KERNELS.get(wl.name[len("kernel/"):])
+        if ops is None or ops.tuning_space is None:
+            return None
+        from repro.tuning import outlook
+
+        return outlook(ops, wl.example_args(), chip, dtype=dtype)
+    except Exception:  # noqa: BLE001 — the outlook is advisory, not load-bearing
+        return None
+
+
 def _time_roi(wl: Workload) -> Optional[float]:
     """ROI wall time through the paper's profiler API (Sec. 3.1)."""
     if wl.fn is None:
@@ -336,7 +371,10 @@ def analyze(
 
     Chains compile/lower (cached) -> event extraction -> Eq. 1 metrics ->
     adapted roofline (Eq. 2) -> Fig. 8 decision tree, plus an optional
-    profiler-timed ROI, and returns the typed :class:`SVEAnalysis`.
+    profiler-timed ROI, and returns the typed :class:`SVEAnalysis`.  For
+    registry kernels with a TuningSpace the result also reports the
+    roofline-predicted tuned-vs-default speedup and any persisted tuned
+    config (``result.tuning``).
 
     Without ``cache``, events come from the module-level ``DEFAULT_CACHE``
     (persistent via the default ArtifactStore, so repeat processes skip
@@ -381,6 +419,7 @@ def analyze(
         roofline=rl,
         decision=decision,
         wall_s=wall,
+        tuning=_tuning_outlook(wl, chip, dtype),
     )
 
 

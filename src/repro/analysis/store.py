@@ -1,7 +1,10 @@
 """Persistent, content-addressed artifact store for extracted Events.
 
-Compiling a workload just to read its PMU-analogue counters is the expensive
-step of the pipeline (seconds per workload for the LLM cells), and the
+This is the persistence layer under the paper's Sec. 3.1 counter
+methodology: the PMU-analogue events extracted from compiled XLA artifacts
+(Table 1) are cached across processes so the counters are collected once
+per distinct workload, ever.  Compiling a workload just to read its
+PMU-analogue counters is the expensive step of the pipeline (seconds per workload for the LLM cells), and the
 counters themselves are tiny, chip-independent JSON.  This module persists
 them across *processes*: each workload is keyed by a **fingerprint** of what
 actually determines its compiled artifact —
@@ -64,6 +67,11 @@ def _code_token(fn: Any, parts: list, seen: set) -> None:
     """
     code = getattr(fn, "__code__", None)
     if code is None:
+        # callables may advertise extra behavioral state (e.g. a KernelOps
+        # with an active tuned config changes what a call compiles to)
+        extra = getattr(fn, "fingerprint_extra", None)
+        if extra:
+            parts.append(str(extra))
         # jit wrappers / KernelOps carry the original via __wrapped__
         wrapped = getattr(fn, "__wrapped__", None)
         if wrapped is not None and id(wrapped) not in seen:
@@ -151,6 +159,11 @@ def _arg_signature(arg: Any) -> str:
     return f"{type(arg).__name__}:{arg!r}"
 
 
+#: Public alias: other content-addressed layers (the tuning-record store)
+#: key on the same abstract argument signatures.
+arg_signature = _arg_signature
+
+
 @functools.lru_cache(maxsize=1)
 def _compiler_token() -> str:
     """jax/jaxlib versions: a compiler upgrade changes what a compile would
@@ -187,7 +200,14 @@ def workload_fingerprint(wl: Any) -> str:
 
 
 class ArtifactStore:
-    """Disk-backed map fingerprint -> Events (one JSON file per entry).
+    """Disk-backed, content-addressed map fingerprint -> JSON payload.
+
+    The generic layer is :meth:`get_json` / :meth:`put_json` (one JSON file
+    per fingerprint, version-checked, corrupt entries dropped); on top of it
+    sit the typed surfaces — :meth:`get`/:meth:`put` for extracted
+    :class:`Events`, and the tuning-record store in
+    :mod:`repro.tuning.records`, which reuses the same directory layout,
+    atomicity, and recovery guarantees for persisted kernel tunings.
 
     ``hits`` / ``misses`` / ``puts`` / ``dropped_corrupt`` are exposed for
     tests and cost accounting.  All operations tolerate concurrent writers:
@@ -205,38 +225,60 @@ class ArtifactStore:
     def path_for(self, fingerprint: str) -> str:
         return os.path.join(self.cache_dir, f"{fingerprint}.json")
 
-    def get(self, fingerprint: str) -> Optional[Events]:
+    def _drop_corrupt(self, path: str) -> None:
+        """Remove an unreadable/stale entry and account it as a miss."""
+        self.dropped_corrupt += 1
+        self.misses += 1
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+    def discard(self, fingerprint: str) -> None:
+        """Corrupt-entry drop for typed layers that fail to decode a payload
+        ``get_json`` already accepted: reverses that hit and accounts the
+        entry as dropped+missed (callers must not adjust counters)."""
+        self.hits -= 1
+        self._drop_corrupt(self.path_for(fingerprint))
+
+    def get_json(self, fingerprint: str) -> Optional[Dict[str, Any]]:
+        """Raw payload for ``fingerprint`` or None; never raises.
+
+        Corrupt / truncated / stale-version files are deleted and reported
+        as misses — the typed layers above recompute and heal the entry.
+        """
         path = self.path_for(fingerprint)
         try:
             with open(path) as f:
                 payload = json.load(f)
             if payload.get("version") != STORE_VERSION:
                 raise ValueError(f"store version {payload.get('version')}")
-            ev = Events.from_dict(payload["events"])
         except FileNotFoundError:
             self.misses += 1
             return None
         except (ValueError, KeyError, TypeError, OSError):
-            # corrupt / truncated / stale-format entry: drop it and recompile
-            self.dropped_corrupt += 1
-            self.misses += 1
-            try:
-                os.remove(path)
-            except OSError:
-                pass
+            self._drop_corrupt(path)
             return None
         self.hits += 1
-        return ev
+        return payload
 
-    def put(self, fingerprint: str, events: Events, *, workload: str = "") -> str:
+    def get(self, fingerprint: str) -> Optional[Events]:
+        payload = self.get_json(fingerprint)
+        if payload is None:
+            return None
+        try:
+            return Events.from_dict(payload["events"])
+        except (ValueError, KeyError, TypeError):
+            self.discard(fingerprint)  # reverses the get_json hit
+            return None
+
+    def put_json(self, fingerprint: str, payload: Dict[str, Any]) -> str:
+        """Atomically persist ``payload`` (version/fingerprint filled in)."""
         os.makedirs(self.cache_dir, exist_ok=True)
         path = self.path_for(fingerprint)
-        payload = {
-            "version": STORE_VERSION,
-            "fingerprint": fingerprint,
-            "workload": workload,
-            "events": events.to_dict(),
-        }
+        # the store's stamps must win over any same-named payload keys, or a
+        # colliding key would make every later get_json() drop the entry
+        payload = {**payload, "version": STORE_VERSION, "fingerprint": fingerprint}
         fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -250,6 +292,11 @@ class ArtifactStore:
             raise
         self.puts += 1
         return path
+
+    def put(self, fingerprint: str, events: Events, *, workload: str = "") -> str:
+        return self.put_json(
+            fingerprint, {"workload": workload, "events": events.to_dict()}
+        )
 
     def entries(self) -> Dict[str, str]:
         """fingerprint -> workload name for every readable entry."""

@@ -1,9 +1,10 @@
-"""The unified workload description + global registry.
+"""The unified workload description + global registry (paper Sec. 3.2/3.3).
 
 A :class:`Workload` is the single currency of the analysis pipeline: a
 callable with example arguments, the dominant element type (the paper's
-ELEN), and — optionally — an analytic flops/bytes/gather-bytes model of the
-kind the paper builds per application (Sec. 3.3).  Everything downstream
+ELEN, the denominator of Eq. 1's VB = VLEN/ELEN), and — optionally — an
+analytic flops/bytes/gather-bytes model of the kind the paper builds per
+application (Sec. 3.3).  Everything downstream
 (``analysis.pipeline.analyze``) consumes a Workload and nothing else, so
 "open a new workload" is one registration instead of edits across the
 kernels / benchmarks / examples layers.

@@ -98,6 +98,9 @@ GRACE_CORE = ChipSpec(
         "fp64": _GRACE_CORE_FP64_SCALAR * 2,
         "fp32": _GRACE_CORE_FP64_SCALAR * 4,
         "fp16": _GRACE_CORE_FP64_SCALAR * 8,
+        # Neoverse V2 SVE carries the BF16 extension (BFDOT/BFMMLA); same
+        # 16-bit lane packing as fp16 — needed by the ELEN-packing tuning axis
+        "bf16": _GRACE_CORE_FP64_SCALAR * 8,
     },
     hbm_bw=30e9,  # single-thread STREAM triad (paper Sec. 3)
     ici_bw_per_link=0.0,

@@ -1,9 +1,11 @@
 """Kernel registry: one jit-wrapper factory for every Pallas kernel.
 
+This is the paper's Sec. 3.2 micro-benchmark suite (GEMM, STREAM, SpMV,
+Jacobi2D, the QC RX gate, flash-decode) behind one registration surface.
 Each ``kernels/<pkg>/ops.py`` used to hand-roll the same
 ``functools.partial(jax.jit, static_argnames=(..., "interpret"))`` wrapper.
 :func:`register_kernel` replaces those six copies with one factory that
-returns a :class:`KernelOps` exposing the three call surfaces:
+returns a :class:`KernelOps` exposing the call surfaces:
 
 * ``op(*args)``        — default call (interpret-mode Pallas, CPU-safe);
 * ``op.kernel(*args)`` — compiled Pallas path (``interpret=False``);
@@ -12,8 +14,12 @@ returns a :class:`KernelOps` exposing the three call surfaces:
 
 Registration also auto-registers the kernel as a :class:`~repro.analysis.
 workload.Workload` (name ``kernel/<name>``) with a small example problem
-and the ref module's analytic flops/bytes model, so every kernel is
-reachable through ``repro.analysis.analyze`` with zero extra wiring.
+and the ref module's analytic flops/bytes model (paper Sec. 3.3), so every
+kernel is reachable through ``repro.analysis.analyze`` with zero extra
+wiring — and, when a :class:`~repro.tuning.space.TuningSpace` is attached,
+through the roofline-guided autotuner (``repro.tuning``): after a
+``tune()`` the ops object resolves its best-known block config at call
+time, with explicit keyword arguments always winning.
 """
 
 from __future__ import annotations
@@ -24,10 +30,19 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 from repro.analysis.workload import Workload, register_lazy
+from repro.tuning import spaces as _spaces
+from repro.tuning.space import TuningSpace, canonical_dtype
 
 
 class KernelOps:
-    """Call surface for one registered kernel (ref / kernel / interpret)."""
+    """Call surface for one registered kernel (ref / kernel / interpret).
+
+    When a :class:`TuningSpace` is attached and a tuned config is active
+    (installed by ``repro.tuning.tune``/``load_tuned``), calls resolve the
+    tuned static arguments automatically: the config is validated against
+    the actual call arguments (clamp + divisibility) and merged only for
+    keywords the caller did not pass — explicit kwargs always win.
+    """
 
     def __init__(
         self,
@@ -37,10 +52,14 @@ class KernelOps:
         *,
         static_argnums: Tuple[int, ...] = (),
         static_argnames: Tuple[str, ...] = (),
+        tuning_space: Optional[TuningSpace] = None,
     ) -> None:
         self.name = name
         self.raw = kernel_fn
         self._ref = ref_fn
+        self.tuning_space = tuning_space
+        self._tuned: Dict[Tuple[str, str], Dict[str, Any]] = {}
+        self._active: Optional[Tuple[str, str]] = None
         names = tuple(static_argnames)
         if "interpret" not in names:
             names = names + ("interpret",)
@@ -49,16 +68,114 @@ class KernelOps:
         )
         functools.update_wrapper(self, kernel_fn, updated=())
 
+    # -- tuned-config state --------------------------------------------------
+
+    def set_tuned(
+        self,
+        config: Dict[str, Any],
+        *,
+        chip: str = "",
+        dtype: str = "",
+        activate: bool = True,
+    ) -> None:
+        """Install a best-known config for (chip, dtype); ``activate`` makes
+        it the one calls resolve (most-recent-tune-wins semantics)."""
+        key = (chip, dtype)
+        self._tuned[key] = dict(config)
+        if activate:
+            self._active = key
+
+    def tuned_config(
+        self, chip: Optional[str] = None, dtype: Optional[str] = None
+    ) -> Optional[Dict[str, Any]]:
+        """The active tuned config (no args), or the one for (chip, dtype)."""
+        if chip is None and dtype is None:
+            if self._active is None:
+                return None
+            return dict(self._tuned[self._active])
+        cfg = self._tuned.get((chip or "", dtype or ""))
+        return dict(cfg) if cfg is not None else None
+
+    def clear_tuned(self) -> None:
+        self._tuned.clear()
+        self._active = None
+
+    def load_tuned(self, **kw: Any):
+        """Pick up a persisted TuningRecord for this kernel (zero timing);
+        see :func:`repro.tuning.load_tuned` for the keyword surface."""
+        from repro.tuning import load_tuned
+
+        return load_tuned(self, **kw)
+
+    @property
+    def fingerprint_extra(self) -> str:
+        """Behavioral state the artifact fingerprint must see: an active
+        tuned config changes what a call lowers to."""
+        if self._active is None:
+            return ""
+        cfg = self._tuned.get(self._active)
+        return f"tuned:{sorted(cfg.items())!r}" if cfg else ""
+
+    def _resolve_active(self, args: Tuple) -> Optional[Dict[str, Any]]:
+        """The config to resolve for THIS call: prefer the entry tuned for
+        the call's element type (a multi-dtype sweep leaves one config per
+        dtype), falling back to the most recently activated one."""
+        if self._active is None:
+            return None
+        chip, _ = self._active
+        for a in args:
+            dt = getattr(a, "dtype", None)
+            if dt is not None:
+                cfg = self._tuned.get((chip, canonical_dtype(dt)))
+                if cfg is not None:
+                    return cfg
+                break
+        return self._tuned.get(self._active)
+
+    def _tuned_kwargs(self, args: Tuple, kw: Dict[str, Any]) -> Dict[str, Any]:
+        """Merge the active tuned config into ``kw`` for keys the caller
+        did not pass, after re-validating it against these arguments.
+
+        Validation sees the call as it would actually execute: caller-passed
+        axis values override the tuned ones (explicit kwargs win), and only
+        the surviving tuned keys are merged.
+        """
+        cfg = self._resolve_active(args)
+        if not cfg:
+            return kw
+        space = self.tuning_space
+        if space is not None:
+            view = {**cfg, **{k: v for k, v in kw.items() if k in space.axes}}
+            extra = {
+                k: v for k, v in kw.items()
+                if k != "interpret" and k not in space.axes
+            }
+            try:
+                valid = space.validate(view, args, extra=extra)
+            except Exception:
+                valid = None
+            if valid is None:  # the call's config does not fit: fall back
+                return kw
+            cfg = valid
+        for k, v in cfg.items():
+            kw.setdefault(k, v)
+        return kw
+
+    # -- call surfaces -------------------------------------------------------
+
     def __call__(self, *args: Any, **kw: Any):
         kw.setdefault("interpret", True)
+        kw = self._tuned_kwargs(args, kw)
         return self._jit(*args, **kw)
 
     def kernel(self, *args: Any, **kw: Any):
         kw["interpret"] = False
+        kw = self._tuned_kwargs(args, kw)
         return self._jit(*args, **kw)
 
     def interpret(self, *args: Any, **kw: Any):
         kw["interpret"] = True
+        kw = self._tuned_kwargs(args, kw)
         return self._jit(*args, **kw)
 
     def lower(self, *args: Any, **kw: Any):
@@ -66,9 +183,12 @@ class KernelOps:
 
         Exposing ``lower`` lets the analysis pipeline compile a kernel
         workload directly instead of re-wrapping it in ``jax.jit`` — which
-        would turn the static arguments into tracers.
+        would turn the static arguments into tracers.  The active tuned
+        config is resolved here too (``fingerprint_extra`` keeps the
+        artifact store's content addresses distinct per config).
         """
         kw.setdefault("interpret", True)
+        kw = self._tuned_kwargs(args, kw)
         return self._jit.lower(*args, **kw)
 
     def ref(self, *args: Any, **kw: Any):
@@ -77,6 +197,13 @@ class KernelOps:
         return self._ref(*args, **kw)
 
     def __repr__(self) -> str:
+        if self._active is not None and self._tuned.get(self._active):
+            chip, dtype = self._active
+            cfg = " ".join(
+                f"{k}={v}" for k, v in sorted(self._tuned[self._active].items())
+            )
+            where = f" @ {chip}/{dtype}" if (chip or dtype) else ""
+            return f"KernelOps({self.name!r}, tuned[{cfg}]{where})"
         return f"KernelOps({self.name!r})"
 
 
@@ -101,12 +228,14 @@ def register_kernel(
     static_argnums: Tuple[int, ...] = (),
     static_argnames: Tuple[str, ...] = (),
     workload: Optional[Callable[[], Workload]] = None,
+    tuning_space: Optional[TuningSpace] = None,
 ):
     """Register a kernel entry point; usable directly or as a decorator.
 
     ``workload`` is a zero-arg builder returning the kernel's example
     Workload; it is registered lazily as ``kernel/<name>`` so importing the
-    registry never constructs example arrays.
+    registry never constructs example arrays.  ``tuning_space`` declares
+    the kernel's tunable static arguments for ``repro.tuning``.
     """
 
     def _do(fn: Callable) -> KernelOps:
@@ -118,6 +247,7 @@ def register_kernel(
             ref,
             static_argnums=static_argnums,
             static_argnames=static_argnames,
+            tuning_space=tuning_space,
         )
         KERNELS[name] = ops
         if workload is not None:
@@ -292,28 +422,33 @@ GEMM = register_kernel(
     ref=_gemm_r.gemm_ref,
     static_argnames=("bm", "bn", "bk"),
     workload=_gemm_workload,
+    tuning_space=_spaces.gemm_space(),
 )
 
 STREAM_COPY = register_kernel(
     "stream-copy", _stream_k.stream_copy,
     ref=_stream_r.copy_ref,
     static_argnames=("block_rows",),
+    tuning_space=_spaces.stream_space(n_arrays=1, flops_per_elem=0.0),
 )
 STREAM_SCALE = register_kernel(
     "stream-scale", _stream_k.stream_scale,
     ref=_stream_r.scale_ref,
     static_argnums=(1,), static_argnames=("block_rows",),
+    tuning_space=_spaces.stream_space(n_arrays=1, flops_per_elem=1.0),
 )
 STREAM_ADD = register_kernel(
     "stream-add", _stream_k.stream_add,
     ref=_stream_r.add_ref,
     static_argnames=("block_rows",),
+    tuning_space=_spaces.stream_space(n_arrays=2, flops_per_elem=1.0),
 )
 STREAM_TRIAD = register_kernel(
     "stream-triad", _stream_k.stream_triad,
     ref=_stream_r.triad_ref,
     static_argnums=(2,), static_argnames=("block_rows",),
     workload=_stream_workload,
+    tuning_space=_spaces.stream_space(n_arrays=2, flops_per_elem=2.0),
 )
 
 SPMV = register_kernel(
@@ -332,12 +467,14 @@ JACOBI_STEP = register_kernel(
     ref=_jac_r.jacobi_ref,
     static_argnames=("block_rows",),
     workload=_jacobi_workload,
+    tuning_space=_spaces.jacobi2d_space(),
 )
 
 RX_GATE = register_kernel(
     "qc-gate", _qc_k.rx_gate,
     static_argnames=("qubit", "theta", "block_outer"),
     workload=_qc_workload,
+    tuning_space=_spaces.qc_gate_space(),
 )
 
 FLASH_DECODE = register_kernel(
@@ -345,4 +482,5 @@ FLASH_DECODE = register_kernel(
     ref=_fd_r.decode_ref,
     static_argnames=("block_s",),
     workload=_flash_decode_workload,
+    tuning_space=_spaces.flash_decode_space(),
 )

@@ -200,12 +200,31 @@ class AnalysisService:
         return self.completed
 
     def report(self) -> Dict[str, Any]:
-        """Machine-readable drain report (a BENCH_*.json trajectory point)."""
+        """Machine-readable drain report (a BENCH_*.json trajectory point).
+
+        ``tuning`` summarizes the autotuner outlook of every kernel cell
+        served: per (kernel, chip, dtype), the roofline-best block config,
+        its predicted speedup over the kernel's hard-coded default, and the
+        persisted tuned config when the tuning store holds one.
+        """
         reqs = [self.completed[uid].to_dict() for uid in sorted(self.completed)]
         n_cells = sum(len(r["results"]) for r in reqs)
+        tuned: Dict[str, Any] = {}
+        for uid in sorted(self.completed):
+            for res in self.completed[uid].results:
+                t = res.tuning
+                if not t:
+                    continue
+                key = f"{t['kernel']}@{res.chip}/{res.dtype}"
+                tuned[key] = {
+                    "best_config": t["best_config"],
+                    "predicted_speedup": t["predicted_speedup"],
+                    "record": t["record"],
+                }
         return {
             "kind": "analysis_service_report",
             "requests": reqs,
+            "tuning": tuned,
             "service": {
                 "requests": len(reqs),
                 "cells": n_cells,

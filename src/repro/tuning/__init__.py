@@ -1,0 +1,50 @@
+"""Roofline-guided kernel autotuning with persistent tuning records.
+
+The paper's analytic machinery (Eq. 1 vectorization bound, Eq. 2 adapted
+roofline) applied as a *search pruner*: instead of hand-picked static block
+shapes, every registry kernel carries a :class:`TuningSpace` (block/tile
+axes + the ELEN-packing dtype axis), :func:`tune` discards candidates the
+roofline + VMEM models already rule out, times only the survivors, and
+persists the winner as a content-addressed :class:`TuningRecord` — so
+repeat processes re-tune **zero** times, mirroring the analysis pipeline's
+zero-recompile artifact store.
+
+    from repro.tuning import tune
+
+    record = tune("gemm")            # prune -> time -> persist -> apply
+    record = tune("gemm")            # store hit: cached=True, no timing
+
+    from repro.kernels.registry import get_kernel
+    get_kernel("gemm")               # repr shows the active tuned config
+
+CLI: ``python -m repro.tuning --help`` (writes a machine-readable
+``tuning.json``); ``python -m benchmarks.run --tune`` runs the same sweep
+before the benchmark suite.  See ``docs/TUNING.md`` for the executable
+guide.
+"""
+
+from repro.tuning.space import (  # noqa: F401
+    TuningSpace,
+    predicted_config_time_s,
+    predicted_time_s,
+)
+from repro.tuning.records import (  # noqa: F401
+    TUNING_VERSION,
+    TuningRecord,
+    default_tuning_dir,
+    default_tuning_store,
+    load_record,
+    save_record,
+    tuning_fingerprint,
+)
+from repro.tuning.tune import (  # noqa: F401
+    format_records,
+    load_tuned,
+    outlook,
+    prune,
+    report_dict,
+    timing_runs,
+    tunable_kernels,
+    tune,
+    tune_kernels,
+)

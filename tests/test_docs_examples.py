@@ -18,6 +18,7 @@ DOCS = [
     "README.md",
     "docs/METHOD.md",
     "docs/ARCHITECTURE.md",
+    "docs/TUNING.md",
 ]
 
 _BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
@@ -52,7 +53,8 @@ def test_doc_python_blocks_execute(doc):
 
 
 def test_readme_links_docs():
-    """README's repo map must point at both method/architecture docs."""
+    """README's repo map must point at the method/architecture/tuning docs."""
     readme = (REPO_ROOT / "README.md").read_text()
     assert "docs/METHOD.md" in readme
     assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/TUNING.md" in readme

@@ -35,7 +35,7 @@ import hashlib
 import json
 import os
 import tempfile
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 from repro.core.counters import Events
 
@@ -298,23 +298,46 @@ class ArtifactStore:
             fingerprint, {"workload": workload, "events": events.to_dict()}
         )
 
-    def entries(self) -> Dict[str, str]:
-        """fingerprint -> workload name for every readable entry."""
-        out: Dict[str, str] = {}
+    def iter_json(self, namespace: str = "") -> Iterator[Tuple[str, Dict[str, Any]]]:
+        """Yield ``(fingerprint, payload)`` for every readable entry.
+
+        The enumeration surface for layers that need to *list* their
+        records (the perf ledger's trajectory, ``python -m repro.tuning
+        --records``, the gate's TuningRecord staleness check) without
+        globbing store internals.  ``namespace`` selects a subdirectory of
+        this store's ``cache_dir`` (e.g. ``"tuning"`` from the root store);
+        empty means the store's own directory.
+
+        Enumeration is read-only and corrupt-*skipping*: a truncated,
+        unparseable, or stale-version file is silently passed over, never
+        deleted — a concurrent writer may be mid-rename, and listing must
+        not race it the way ``get_json``'s self-healing delete may.
+        Entries come back in deterministic (filename-sorted) order.
+        """
+        root = os.path.join(self.cache_dir, namespace) if namespace else self.cache_dir
         try:
-            names = os.listdir(self.cache_dir)
+            names = os.listdir(root)
         except OSError:
-            return out
+            return
         for fname in sorted(names):
             if not fname.endswith(".json"):
                 continue
             try:
-                with open(os.path.join(self.cache_dir, fname)) as f:
+                with open(os.path.join(root, fname)) as f:
                     payload = json.load(f)
-                out[payload["fingerprint"]] = payload.get("workload", "")
-            except (ValueError, KeyError, OSError):
+                if payload.get("version") != STORE_VERSION:
+                    continue
+                fingerprint = str(payload["fingerprint"])
+            except (ValueError, KeyError, TypeError, OSError):
                 continue
-        return out
+            yield fingerprint, payload
+
+    def entries(self) -> Dict[str, str]:
+        """fingerprint -> workload name for every readable entry."""
+        return {
+            fp: payload.get("workload", "")
+            for fp, payload in self.iter_json()
+        }
 
     def clear(self) -> int:
         """Delete every entry; returns the number of files removed."""

@@ -1,0 +1,56 @@
+"""Perf trajectory ledger + decision-tree regression gate.
+
+The layer that makes every other persistent artifact pay rent: benchmark
+``summary.json``, autotuner ``tuning.json``, and SVE analysis reports are
+ingested into an append-only, content-addressed ledger of
+:class:`~repro.perf.ledger.BenchRun` records (stamped with a
+:class:`~repro.perf.ledger.RunEnv` fingerprint: chip, dtype, git SHA, jax
+version, tuned-config hash), baselines are resolved by policy
+(``latest`` / ``pinned:<sha>`` / ``median:<K>``), regressions are detected
+with noise-aware per-metric tolerances, and every confirmed regression is
+routed back through the paper's Fig. 8 decision tree and Eq. 2 adapted
+roofline so the gate reports *why* — a PerfClass transition with the AI
+vs AI_IRV quantities that justify it — not just "slower".
+
+    from repro.perf import Ledger, capture_env, gate_run, metrics_from_analysis
+
+    run = ledger.record(metrics_from_analysis([analysis]), env=capture_env())
+    result = gate_run(run, ledger, policy="latest")
+    sys.exit(result.exit_code)
+
+CLI: ``python -m repro.perf record|compare|gate|report`` (see
+``docs/PERF.md`` for the executable walkthrough); ``python -m
+benchmarks.run --record --gate`` wires the same path behind the benchmark
+driver.
+"""
+
+from repro.perf.ledger import (  # noqa: F401
+    PERF_VERSION,
+    BenchRun,
+    Ledger,
+    RunEnv,
+    capture_env,
+    default_ledger,
+    default_perf_dir,
+    git_sha,
+    metrics_from_analysis,
+    metrics_from_summary,
+    metrics_from_tuning,
+    tuned_state_hash,
+)
+from repro.perf.baseline import resolve_baseline  # noqa: F401
+from repro.perf.compare import (  # noqa: F401
+    SPECS,
+    MetricDelta,
+    MetricSpec,
+    Regression,
+    RunComparison,
+    compare_runs,
+)
+from repro.perf.triage import Triage, triage_regressions  # noqa: F401
+from repro.perf.gate import (  # noqa: F401
+    GateResult,
+    export_trajectory,
+    format_markdown,
+    gate_run,
+)

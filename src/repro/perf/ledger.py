@@ -1,0 +1,435 @@
+"""The perf-trajectory ledger: append-only, content-addressed BenchRuns.
+
+Every benchmark / analysis / tuning run in this repo already emits a
+machine-readable artifact (``summary.json``, ``tuning.json``, the analysis
+service report) — and until now each one died with its process.  The ledger
+turns them into :class:`BenchRun` records persisted through the same JSON
+layer as the analysis pipeline's :class:`~repro.analysis.store.
+ArtifactStore` (atomic temp-file + rename writes, corrupt entries skipped,
+``$REPRO_ARTIFACT_DIR``-relative directory), under a ``perf/``
+subdirectory.
+
+Records are **append-only**: every ``record()`` writes a *new* entry whose
+run id is a content address over (environment, metrics, sequence number,
+timestamp) — recording the same payload twice appends twice, and no write
+ever rewrites an earlier run.  That is what makes the ledger a trajectory:
+``runs()`` returns the full history in sequence order, and the regression
+gate (:mod:`repro.perf.gate`) compares any point against any baseline
+policy (:mod:`repro.perf.baseline`).
+
+Each run is stamped with a :class:`RunEnv` fingerprint — chip, dtype, git
+SHA, jax version, active tuned-config hash, host — because per-architecture
+speedups only mean anything against a baseline *for that architecture*
+(Sharma et al. 2025), and VL-agnostic code makes performance a moving
+target across vector lengths (Stephens et al. 2018): the ledger keys its
+trajectory by (chip, dtype) series so those axes never get conflated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+import platform
+import subprocess
+import time
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Union
+
+from repro.analysis.store import ArtifactStore, _default_dir, _store_for
+
+PERF_VERSION = 1
+
+#: Environment variable overriding the derived git SHA (containers/CI
+#: sometimes run from an exported tree with no .git).
+GIT_SHA_ENV = "REPRO_GIT_SHA"
+
+
+# ---------------------------------------------------------------------------
+# Environment fingerprinting
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Short git SHA of the working tree, ``$REPRO_GIT_SHA``, or "unknown"."""
+    env = os.environ.get(GIT_SHA_ENV)
+    if env:
+        return env
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True,
+            text=True,
+            timeout=5,
+        )
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def jax_version() -> str:
+    try:
+        import jax
+
+        return jax.__version__
+    except Exception:  # noqa: BLE001 — env stamp must never fail a run
+        return "unknown"
+
+
+def tuned_state_hash() -> str:
+    """Hash of every active tuned config across the kernel registry.
+
+    This is the staleness signal the gate's triage keys on: a run recorded
+    under one set of tuned configs and a run recorded under another are not
+    the same experiment, even at the same git SHA.  Empty string when no
+    kernel holds a tuned config.
+    """
+    try:
+        from repro.kernels.registry import KERNELS
+
+        parts = []
+        for name in sorted(KERNELS):
+            ops = KERNELS[name]
+            tuned = getattr(ops, "_tuned", None)
+            if tuned:
+                for key in sorted(tuned):
+                    parts.append(f"{name}@{key}:{sorted(tuned[key].items())!r}")
+        if not parts:
+            return ""
+        return hashlib.sha256("|".join(parts).encode()).hexdigest()[:12]
+    except Exception:  # noqa: BLE001 — env stamp must never fail a run
+        return ""
+
+
+@dataclasses.dataclass(frozen=True)
+class RunEnv:
+    """Environment fingerprint one BenchRun was measured under."""
+
+    chip: str = "grace-core"
+    dtype: str = "fp32"
+    git_sha: str = "unknown"
+    jax_version: str = "unknown"
+    tuned_hash: str = ""
+    host: str = ""
+
+    def series_key(self) -> str:
+        """The trajectory axis: runs compare within one (chip, dtype)."""
+        return f"{self.chip}/{self.dtype}"
+
+    def to_dict(self) -> Dict[str, str]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunEnv":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: str(v) for k, v in d.items() if k in fields})
+
+
+def capture_env(chip: str = "grace-core", dtype: str = "fp32") -> RunEnv:
+    """Stamp the current process: git SHA, jax version, tuned configs, host."""
+    return RunEnv(
+        chip=chip,
+        dtype=dtype,
+        git_sha=git_sha(),
+        jax_version=jax_version(),
+        tuned_hash=tuned_state_hash(),
+        host=platform.node(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The record
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BenchRun:
+    """One appended trajectory point: env + per-workload metric dicts.
+
+    ``metrics`` maps a workload key (``kernel/gemm@grace-core/fp32``,
+    ``bench/fig3_vectorization``, ``tuning/gemm@grace-core/fp32``) to a flat
+    dict of named quantities (``wall_s``, ``ai``, ``r_ins``, ``perf_class``,
+    ...).  Everything the triage needs to re-run the paper's decision tree
+    on a historical point is stored here — a BenchRun is self-contained.
+    """
+
+    run_id: str
+    seq: int
+    timestamp: float
+    env: RunEnv
+    metrics: Dict[str, Dict[str, Any]]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "run_id": self.run_id,
+            "seq": self.seq,
+            "timestamp": self.timestamp,
+            "env": self.env.to_dict(),
+            "metrics": self.metrics,
+            "meta": self.meta,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "BenchRun":
+        return cls(
+            run_id=str(d["run_id"]),
+            seq=int(d["seq"]),
+            timestamp=float(d.get("timestamp", 0.0)),
+            env=RunEnv.from_dict(d.get("env") or {}),
+            metrics={
+                str(k): dict(v) for k, v in (d.get("metrics") or {}).items()
+            },
+            meta=dict(d.get("meta") or {}),
+        )
+
+    def metric(self, key: str, name: str, default: Any = None) -> Any:
+        return (self.metrics.get(key) or {}).get(name, default)
+
+
+def run_id_for(
+    env: RunEnv, metrics: Mapping[str, Mapping[str, Any]], seq: int, ts: float
+) -> str:
+    """Content address of one trajectory point.
+
+    Sequence number and timestamp are part of the address on purpose: the
+    ledger is a *trajectory*, so two identical measurements made at
+    different times are two distinct points, and appending can never
+    silently rewrite history.
+    """
+    payload = json.dumps(
+        {"env": env.to_dict(), "metrics": metrics, "seq": seq, "ts": ts},
+        sort_keys=True,
+        default=str,
+    )
+    return hashlib.sha256(payload.encode()).hexdigest()[:32]
+
+
+# ---------------------------------------------------------------------------
+# Metric extraction: summary.json / tuning.json / SVEAnalysis reports
+# ---------------------------------------------------------------------------
+
+
+def metrics_from_summary(summary: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Per-benchmark rows / wall time / pass-fail from ``summary.json``."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for bench in summary.get("benchmarks") or []:
+        name = bench.get("name", "?")
+        out[f"bench/{name}"] = {
+            "ok": bool(bench.get("ok")),
+            "rows": int(bench.get("rows", 0)),
+            "wall_s": float(bench.get("wall_s", 0.0)),
+        }
+    return out
+
+
+def _config_token(config: Any) -> str:
+    """Order-stable string form of a tuned config dict."""
+    if isinstance(config, Mapping):
+        return " ".join(f"{k}={v}" for k, v in sorted(config.items()))
+    return str(config)
+
+
+def metrics_from_tuning(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Per-(kernel, chip, dtype) timings and configs from ``tuning.json``."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for rec in report.get("records") or []:
+        key = f"tuning/{rec['kernel']}@{rec['chip']}/{rec['dtype']}"
+        out[key] = {
+            "best_time_s": float(rec.get("best_time_s", 0.0)),
+            "default_time_s": float(rec.get("default_time_s", 0.0)),
+            "speedup_vs_default": float(rec.get("speedup_vs_default", 1.0)),
+            "predicted_speedup": float(rec.get("predicted_speedup", 1.0)),
+            "config": _config_token(rec.get("config") or {}),
+        }
+    return out
+
+
+def _metrics_from_analysis_dict(d: Mapping[str, Any]) -> Dict[str, Any]:
+    """Flatten one SVEAnalysis dict into the ledger's metric schema.
+
+    Keeps every quantity the Fig. 8 decision tree and Eq. 2 roofline need,
+    so :mod:`repro.perf.triage` can re-classify a historical point without
+    the original events.
+    """
+    hbm = float(d.get("hbm_bytes") or 0.0)
+    m: Dict[str, Any] = {
+        "ai": float(d.get("ai") or 0.0),
+        "r_ins": float(d.get("r_ins") or 0.0),
+        "flops": float(d.get("flops") or 0.0),
+        "hbm_bytes": hbm,
+        "gather_bytes": float(d.get("gather_fraction") or 0.0) * hbm,
+        "vectorizable_fraction": float(d.get("vectorizable_fraction") or 0.0),
+        "perf_class": int(d.get("perf_class") or 0),
+        "predicted_speedup": float(d.get("predicted_speedup") or 1.0),
+    }
+    if d.get("wall_s") is not None:
+        m["wall_s"] = float(d["wall_s"])
+    tuning = d.get("tuning") or {}
+    if tuning.get("record"):
+        m["config"] = _config_token(tuning["record"])
+    return m
+
+
+def metrics_from_analysis(
+    analyses: Union[Mapping[str, Any], Iterable[Any]],
+) -> Dict[str, Dict[str, Any]]:
+    """Metric dicts from SVEAnalysis objects, their dicts, or a whole
+    analysis-service report (``requests[].results[]`` are walked)."""
+    if isinstance(analyses, Mapping):
+        cells: List[Mapping[str, Any]] = []
+        for req in analyses.get("requests") or []:
+            cells.extend(req.get("results") or [])
+    else:
+        cells = [a.to_dict() if hasattr(a, "to_dict") else a for a in analyses]
+    out: Dict[str, Dict[str, Any]] = {}
+    for d in cells:
+        key = f"{d['workload']}@{d['chip']}/{d['dtype']}"
+        out[key] = _metrics_from_analysis_dict(d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The ledger
+# ---------------------------------------------------------------------------
+
+
+def default_perf_dir() -> str:
+    """``<artifact dir>/perf`` — rides ``$REPRO_ARTIFACT_DIR`` so test
+    isolation and operator overrides cover the ledger for free."""
+    return os.path.join(_default_dir(), "perf")
+
+
+class Ledger:
+    """Append-only trajectory of BenchRuns over one store directory.
+
+    Reads (``runs`` / ``get`` / ``latest`` / ``next_seq``) re-enumerate the
+    directory each call — correctness under concurrent recorders is worth
+    more than caching at trajectory scale (hundreds of small JSON files);
+    callers looping over history should take one ``runs()`` snapshot.
+    """
+
+    def __init__(self, root: Optional[str] = None) -> None:
+        self.root = root or default_perf_dir()
+        self.store: ArtifactStore = _store_for(self.root)
+
+    # -- write ---------------------------------------------------------------
+
+    def record(
+        self,
+        metrics: Mapping[str, Mapping[str, Any]],
+        *,
+        env: Optional[RunEnv] = None,
+        meta: Optional[Mapping[str, Any]] = None,
+    ) -> BenchRun:
+        """Append one trajectory point; returns the persisted BenchRun.
+
+        Never rewrites: the run id covers the sequence number and
+        timestamp, so even a byte-identical metric payload lands in a new
+        entry.  Concurrent recorders may race to the same ``seq``; both
+        entries survive (distinct ids) and sorting breaks ties by
+        timestamp then id.
+        """
+        if not metrics:
+            raise ValueError("refusing to record an empty metric set")
+        env = env or capture_env()
+        seq = self.next_seq()
+        ts = time.time()
+        metrics = {str(k): dict(v) for k, v in metrics.items()}
+        run = BenchRun(
+            run_id=run_id_for(env, metrics, seq, ts),
+            seq=seq,
+            timestamp=ts,
+            env=env,
+            metrics=metrics,
+            meta=dict(meta or {}),
+        )
+        self.store.put_json(
+            run.run_id,
+            {
+                "kind": "perf_run",
+                "perf_version": PERF_VERSION,
+                "workload": f"perf/{env.series_key()}#{seq}",
+                "run": run.to_dict(),
+            },
+        )
+        return run
+
+    def record_sources(
+        self,
+        *,
+        summary: Optional[Mapping[str, Any]] = None,
+        tuning: Optional[Mapping[str, Any]] = None,
+        analyses: Union[Mapping[str, Any], Iterable[Any], None] = None,
+        env: Optional[RunEnv] = None,
+        meta: Optional[Mapping[str, Any]] = None,
+    ) -> BenchRun:
+        """Ingest any mix of the stack's artifacts into one BenchRun."""
+        metrics: Dict[str, Dict[str, Any]] = {}
+        sources: List[str] = []
+        if summary is not None:
+            metrics.update(metrics_from_summary(summary))
+            sources.append("summary")
+        if tuning is not None:
+            metrics.update(metrics_from_tuning(tuning))
+            sources.append("tuning")
+        if analyses is not None:
+            metrics.update(metrics_from_analysis(analyses))
+            sources.append("analysis")
+        if env is None and summary is not None and summary.get("env"):
+            env = RunEnv.from_dict(summary["env"])
+        meta = {**(meta or {}), "sources": sources}
+        # an aborted benchmark run must carry its failure count no matter
+        # which ingestion path recorded it: baseline resolution filters on
+        # meta["failed"] so truncated wall times never anchor a gate
+        if summary is not None and summary.get("failed"):
+            meta.setdefault("failed", int(summary["failed"]))
+        return self.record(metrics, env=env, meta=meta)
+
+    # -- read ----------------------------------------------------------------
+
+    def runs(self, series: Optional[str] = None) -> List[BenchRun]:
+        """Every readable run, sequence-ordered; optionally one series."""
+        out: List[BenchRun] = []
+        for _, payload in self.store.iter_json():
+            if payload.get("perf_version") != PERF_VERSION:
+                continue
+            try:
+                run = BenchRun.from_dict(payload["run"])
+            except (KeyError, TypeError, ValueError):
+                continue  # corrupt-skip: never raise out of enumeration
+            if series is None or run.env.series_key() == series:
+                out.append(run)
+        out.sort(key=lambda r: (r.seq, r.timestamp, r.run_id))
+        return out
+
+    def get(self, run_id: str) -> Optional[BenchRun]:
+        """Exact or unique-prefix lookup by run id."""
+        matches = [r for r in self.runs() if r.run_id.startswith(run_id)]
+        return matches[0] if len(matches) == 1 else None
+
+    def latest(self, series: Optional[str] = None) -> Optional[BenchRun]:
+        runs = self.runs(series)
+        return runs[-1] if runs else None
+
+    def next_seq(self) -> int:
+        runs = self.runs()
+        return (runs[-1].seq + 1) if runs else 1
+
+    def series(self) -> List[str]:
+        return sorted({r.env.series_key() for r in self.runs()})
+
+    def __repr__(self) -> str:
+        # no runs() here: repr must not do directory I/O (debugger/logging)
+        return f"Ledger({self.root!r})"
+
+
+def default_ledger() -> Ledger:
+    """Ledger over the default directory, resolved at call time (so the
+    ``$REPRO_ARTIFACT_DIR`` override is honored, mirroring default_store)."""
+    return Ledger(default_perf_dir())

@@ -199,13 +199,47 @@ class AnalysisService:
         self.wall_s += time.perf_counter() - t0
         return self.completed
 
+    def perf_ledger(self):
+        """The perf ledger that corresponds to THIS service's store: the
+        ``perf/`` sibling of its artifact directory (matching the default
+        layout, where the ledger lives under the events store's root), or
+        the process default when the service runs store-less."""
+        import os
+
+        from repro.perf import Ledger, default_ledger
+
+        store = self.cache.store
+        if store is None:
+            return default_ledger()
+        return Ledger(os.path.join(store.cache_dir, "perf"))
+
+    def _trajectory(self) -> Dict[str, Any]:
+        """Perf-ledger context for this report: how many trajectory points
+        this service's ledger holds and the latest run id, so a consumer
+        can line this report up against the recorded history.  Advisory —
+        never raises (an empty/unreadable ledger reports zero runs)."""
+        try:
+            runs = self.perf_ledger().runs()
+            return {
+                "runs": len(runs),
+                "latest_run_id": runs[-1].run_id if runs else None,
+                "series": sorted({r.env.series_key() for r in runs}),
+            }
+        except Exception:  # noqa: BLE001 — trajectory context is advisory
+            return {"runs": 0, "latest_run_id": None, "series": []}
+
     def report(self) -> Dict[str, Any]:
         """Machine-readable drain report (a BENCH_*.json trajectory point).
 
+        ``schema`` versions this report's shape so downstream consumers can
+        evolve with the trajectory format (bump it on breaking changes).
         ``tuning`` summarizes the autotuner outlook of every kernel cell
         served: per (kernel, chip, dtype), the roofline-best block config,
         its predicted speedup over the kernel's hard-coded default, and the
         persisted tuned config when the tuning store holds one.
+        ``trajectory`` is the perf ledger's current state; the CLI's
+        ``--record`` appends this very report to that ledger and stamps the
+        resulting ``run_id`` into the payload.
         """
         reqs = [self.completed[uid].to_dict() for uid in sorted(self.completed)]
         n_cells = sum(len(r["results"]) for r in reqs)
@@ -223,8 +257,10 @@ class AnalysisService:
                 }
         return {
             "kind": "analysis_service_report",
+            "schema": 1,
             "requests": reqs,
             "tuning": tuned,
+            "trajectory": self._trajectory(),
             "service": {
                 "requests": len(reqs),
                 "cells": n_cells,
@@ -269,6 +305,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "$REPRO_ARTIFACT_DIR or ~/.cache/repro/artifacts)")
     ap.add_argument("--no-store", action="store_true",
                     help="memory-only cache; never touch the disk store")
+    ap.add_argument("--record", action="store_true",
+                    help="append this report to the perf trajectory ledger "
+                         "(repro.perf) and stamp its run_id into the payload")
     ap.add_argument("--out", default=None,
                     help="write the JSON report here (default: stdout)")
     ap.add_argument("--list", action="store_true",
@@ -302,6 +341,35 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                        source=args.source, time_roi=args.time_roi)
     service.run_until_drained()
     report = service.report()
+
+    if args.record:
+        from repro.perf import capture_env
+
+        if report["service"]["cells"] == 0:
+            print("[perf ledger: nothing to record — every request errored]",
+                  file=sys.stderr)
+        else:
+            # the RunEnv series must reflect what was actually served, or
+            # gate/baseline resolution (series-scoped) never finds the run:
+            # primary chip is the first swept; dtype is the single dtype the
+            # cells share, else "mixed"
+            dtypes = {
+                res["dtype"]
+                for req in report["requests"] for res in req["results"]
+            }
+            ledger = service.perf_ledger()  # rides --store-dir, not global state
+            run = ledger.record_sources(
+                analyses=report,
+                env=capture_env(
+                    chip=args.chips[0],
+                    dtype=dtypes.pop() if len(dtypes) == 1 else "mixed",
+                ),
+                meta={"kind": "analysis_service"},
+            )
+            report["run_id"] = run.run_id
+            report["trajectory"] = service._trajectory()  # now includes this run
+            print(f"[perf ledger: recorded run {run.run_id[:12]} "
+                  f"(seq {run.seq}) -> {ledger.root}]", file=sys.stderr)
 
     results = [r for req in service.completed.values() for r in req.results]
     print(format_table(results), file=sys.stderr)

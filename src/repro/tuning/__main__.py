@@ -57,7 +57,28 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write tuning.json here (default: stdout)")
     ap.add_argument("--list", action="store_true",
                     help="list tunable kernels and exit")
+    ap.add_argument("--records", action="store_true",
+                    help="list persisted tuning records and exit")
     args = ap.parse_args(argv)
+
+    if args.records:
+        # enumerate through the store's listing surface (iter_json) rather
+        # than globbing its files — same path the perf gate's staleness
+        # check walks
+        from repro.tuning.records import TUNING_VERSION, resolve_store
+
+        store = resolve_store(args.store_dir or "default")
+        n = 0
+        for fp, payload in store.iter_json():
+            if payload.get("tuning_version") != TUNING_VERSION:
+                continue
+            r = payload.get("record") or {}
+            cfg = " ".join(f"{k}={v}" for k, v in sorted((r.get("config") or {}).items()))
+            print(f"{fp}  {r.get('kernel')}@{r.get('chip')}/{r.get('dtype')}  "
+                  f"[{cfg}]  best={r.get('best_time_s', 0):.3g}s")
+            n += 1
+        print(f"[{n} persisted records in {store.cache_dir}]", file=sys.stderr)
+        return 0
 
     from repro.tuning import (
         format_records,

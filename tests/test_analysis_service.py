@@ -107,6 +107,9 @@ def test_report_is_json_serializable_trajectory_point():
     svc.run_until_drained()
     report = json.loads(json.dumps(svc.report()))
     assert report["kind"] == "analysis_service_report"
+    assert report["schema"] == 1  # versioned so consumers can evolve
+    # perf-ledger context: an isolated test store holds no trajectory yet
+    assert set(report["trajectory"]) == {"runs", "latest_run_id", "series"}
     svc_stats = report["service"]
     for key in ("requests", "cells", "waves", "wall_s", "compiles",
                 "store_hits", "jobs", "errors"):
@@ -154,6 +157,43 @@ def test_cli_emits_json_report(tmp_path, capsys):
     assert report["service"]["requests"] == 2
     table = capsys.readouterr().err
     assert "kernel/gemm" in table  # the human-readable table went to stderr
+
+
+def test_cli_record_lands_in_the_served_series(tmp_path, monkeypatch):
+    """--record stamps the RunEnv with the dtype actually served (here the
+    --dtypes override), so series-scoped gate/baseline lookups find it."""
+    monkeypatch.setenv("REPRO_ARTIFACT_DIR", str(tmp_path))
+    out = tmp_path / "report.json"
+    rc = main(["--workloads", "kernel/gemm", "--chips", "grace-core",
+               "--dtypes", "bf16", "--no-store", "--record",
+               "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["schema"] == 1
+    from repro.perf import default_ledger
+
+    (run,) = default_ledger().runs()
+    assert report["run_id"] == run.run_id  # stamped into the payload
+    assert run.env.series_key() == "grace-core/bf16"
+    assert set(run.metrics) == {"kernel/gemm@grace-core/bf16"}
+    assert report["trajectory"]["runs"] == 1  # refreshed post-record
+
+
+def test_cli_record_rides_store_dir_not_global_state(tmp_path, monkeypatch):
+    """--store-dir isolates the trajectory too: runs land in (and the
+    report's trajectory block reads) <store-dir>/perf, not the shared
+    default ledger."""
+    from repro.perf import Ledger, default_ledger
+
+    monkeypatch.setenv("REPRO_ARTIFACT_DIR", str(tmp_path / "default"))
+    out = tmp_path / "report.json"
+    rc = main(["--workloads", "kernel/gemm", "--chips", "grace-core",
+               "--store-dir", str(tmp_path / "proj"), "--record",
+               "--out", str(out)])
+    assert rc == 0
+    assert default_ledger().runs() == []  # global ledger untouched
+    (run,) = Ledger(str(tmp_path / "proj" / "perf")).runs()
+    assert json.loads(out.read_text())["run_id"] == run.run_id
 
 
 def test_cli_rejects_unknown_workload(capsys):

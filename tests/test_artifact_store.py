@@ -173,6 +173,34 @@ def test_store_put_get_and_stats(tmp_path):
     assert store.clear() == 1
 
 
+def test_iter_json_enumerates_without_globbing_internals(tmp_path):
+    """The listing surface (perf ledger, `repro.tuning --records`): every
+    readable entry in deterministic order, corrupt/stale files skipped —
+    and never deleted, unlike get_json's self-healing path."""
+    store = ArtifactStore(str(tmp_path))
+    store.put_json("bb" * 16, {"workload": "b", "x": 2})
+    store.put_json("aa" * 16, {"workload": "a", "x": 1})
+    (tmp_path / "zz.json").write_text("{truncated")
+    (tmp_path / "stale.json").write_text('{"version": 99, "fingerprint": "s"}')
+    (tmp_path / "notes.txt").write_text("ignored")
+    got = list(store.iter_json())
+    assert [fp for fp, _ in got] == ["aa" * 16, "bb" * 16]  # filename-sorted
+    assert [p["x"] for _, p in got] == [1, 2]
+    assert (tmp_path / "zz.json").exists()  # skip-only: no deletion
+    assert store.dropped_corrupt == 0 and store.misses == 0
+
+
+def test_iter_json_namespace_selects_subdirectory(tmp_path):
+    """A root store can list a typed layer's subdirectory (e.g. tuning/)."""
+    root = ArtifactStore(str(tmp_path))
+    sub = ArtifactStore(str(tmp_path / "tuning"))
+    sub.put_json("cc" * 16, {"workload": "gemm", "kind": "tuning"})
+    assert list(root.iter_json()) == []
+    ((fp, payload),) = list(root.iter_json("tuning"))
+    assert fp == "cc" * 16 and payload["workload"] == "gemm"
+    assert list(root.iter_json("missing-dir")) == []  # empty, never raises
+
+
 @pytest.mark.parametrize("garbage", ["{not json", '{"version": 99}', ""])
 def test_corrupt_cache_file_recovered(tmp_path, garbage):
     """A corrupt/truncated/stale entry is dropped and recompiled, not raised."""

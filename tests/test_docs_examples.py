@@ -19,6 +19,7 @@ DOCS = [
     "docs/METHOD.md",
     "docs/ARCHITECTURE.md",
     "docs/TUNING.md",
+    "docs/PERF.md",
 ]
 
 _BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
@@ -58,3 +59,4 @@ def test_readme_links_docs():
     assert "docs/METHOD.md" in readme
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/TUNING.md" in readme
+    assert "docs/PERF.md" in readme

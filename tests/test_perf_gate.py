@@ -1,0 +1,591 @@
+"""The perf trajectory ledger + decision-tree regression gate (repro.perf).
+
+ISSUE-4 contracts: the ledger is append-only (a second ``record`` — in this
+process or another — appends, never rewrites); baselines resolve by policy
+(latest / pinned / rolling-median-of-K); comparison is noise-aware per
+metric spec; triage maps synthetic before/after Events deltas onto all four
+Fig.-8 PerfClass outcomes with the Eq. 2 quantities (AI vs AI_IRV) that
+justify them; and the end-to-end gate contract holds: record -> perturb ->
+gate exits non-zero naming the class transition; an unperturbed re-run
+exits zero and performs zero recompiles (store-backed).
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze
+from repro.analysis.pipeline import ArtifactCache, analyze_events
+from repro.analysis.store import ArtifactStore
+from repro.analysis.workload import get_workload
+from repro.core import hw
+from repro.core.counters import Events
+from repro.core.decision_tree import PerfClass
+from repro.core.roofline import adapted_roofline
+from repro.perf import (
+    BenchRun,
+    Ledger,
+    RunEnv,
+    capture_env,
+    compare_runs,
+    gate_run,
+    metrics_from_analysis,
+    metrics_from_summary,
+    metrics_from_tuning,
+    resolve_baseline,
+    triage_regressions,
+)
+from repro.perf.gate import export_trajectory, format_markdown
+from repro.perf.triage import split_key
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ENV = RunEnv(chip="grace-core", dtype="fp32", git_sha="aaaa111",
+             jax_version="0", tuned_hash="", host="t")
+
+
+def _run(ledger, metrics, env=ENV):
+    return ledger.record(metrics, env=env)
+
+
+def _summary(wall_s=2.0, rows=13, ok=True):
+    return {
+        "kind": "benchmarks_summary",
+        "benchmarks": [
+            {"name": "fig3_vectorization", "ok": ok, "rows": rows,
+             "wall_s": wall_s, "error": None}
+        ],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Ledger: ingestion + append-only trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_from_all_three_sources(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    summary = _summary()
+    tuning = {"records": [{
+        "kernel": "gemm", "chip": "grace-core", "dtype": "fp32",
+        "config": {"bm": 256, "bk": 128}, "best_time_s": 1e-3,
+        "default_time_s": 2e-3, "speedup_vs_default": 2.0,
+        "predicted_speedup": 1.5,
+    }]}
+    analysis = analyze("kernel/gemm", hw.GRACE_CORE)
+    run = ledger.record_sources(
+        summary=summary, tuning=tuning, analyses=[analysis], env=ENV
+    )
+    assert set(run.metrics) == {
+        "bench/fig3_vectorization",
+        "tuning/gemm@grace-core/fp32",
+        "kernel/gemm@grace-core/fp32",
+    }
+    assert run.metric("bench/fig3_vectorization", "rows") == 13
+    # sorted-key config token: ledger ingestion never re-derives it
+    assert run.metric("tuning/gemm@grace-core/fp32", "config") == "bk=128 bm=256"
+    m = run.metrics["kernel/gemm@grace-core/fp32"]
+    assert m["perf_class"] == int(analysis.perf_class)
+    assert m["ai"] == pytest.approx(analysis.ai)
+    # everything the triage needs to re-run Fig. 8 is self-contained
+    for name in ("flops", "hbm_bytes", "gather_bytes", "r_ins",
+                 "vectorizable_fraction"):
+        assert name in m
+
+
+def test_summary_env_stamp_is_honored(tmp_path):
+    summary = {**_summary(), "env": dataclasses.asdict(
+        dataclasses.replace(ENV, git_sha="stamped99"))}
+    run = Ledger(str(tmp_path)).record_sources(summary=summary)
+    assert run.env.git_sha == "stamped99"  # never re-derived
+
+
+def test_ledger_appends_never_rewrites(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    r2 = _run(ledger, metrics_from_summary(_summary()))  # identical payload
+    assert r1.run_id != r2.run_id  # timestamp+seq are part of the address
+    assert [r.seq for r in ledger.runs()] == [1, 2]
+    # the first entry's bytes are untouched by the second record
+    p1 = ledger.store.path_for(r1.run_id)
+    with open(p1) as f:
+        assert json.load(f)["run"]["run_id"] == r1.run_id
+
+
+def test_ledger_series_filter_and_lookup(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    r2 = _run(ledger, metrics_from_summary(_summary()),
+              env=dataclasses.replace(ENV, dtype="bf16"))
+    assert ledger.series() == ["grace-core/bf16", "grace-core/fp32"]
+    assert [r.run_id for r in ledger.runs("grace-core/fp32")] == [r1.run_id]
+    assert ledger.get(r1.run_id[:10]).run_id == r1.run_id  # prefix lookup
+    assert ledger.latest("grace-core/bf16").run_id == r2.run_id
+
+
+def test_ledger_refuses_empty_and_skips_corrupt(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    with pytest.raises(ValueError):
+        ledger.record({})
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    (tmp_path / "zz.json").write_text("{not json")
+    assert [r.run_id for r in ledger.runs()] == [r1.run_id]  # skip, not raise
+    assert (tmp_path / "zz.json").exists()  # enumeration never deletes
+
+
+# ---------------------------------------------------------------------------
+# Baseline policies
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_latest_excludes_run_under_test(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary(wall_s=1.0)))
+    r2 = _run(ledger, metrics_from_summary(_summary(wall_s=2.0)))
+    assert resolve_baseline(ledger, "latest").run_id == r2.run_id
+    assert resolve_baseline(
+        ledger, "latest", exclude=(r2.run_id,)
+    ).run_id == r1.run_id
+
+
+def test_baseline_pinned_by_run_id_and_git_sha(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary()),
+              env=dataclasses.replace(ENV, git_sha="feedbeef1234"))
+    _run(ledger, metrics_from_summary(_summary()))
+    assert resolve_baseline(ledger, f"pinned:{r1.run_id[:8]}").run_id == r1.run_id
+    assert resolve_baseline(ledger, "pinned:feedbeef").run_id == r1.run_id
+    assert resolve_baseline(ledger, "pinned:nope") is None
+
+
+def test_baseline_median_absorbs_an_outlier(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    for wall in (1.0, 1.1, 30.0):  # one noisy spike
+        _run(ledger, metrics_from_summary(_summary(wall_s=wall)))
+    base = resolve_baseline(ledger, "median:3")
+    assert base.metric("bench/fig3_vectorization", "wall_s") == 1.1
+    assert base.metric("bench/fig3_vectorization", "rows") == 13
+    assert base.meta["synthetic"] == "median:3"
+
+
+def test_baseline_unknown_policy_raises(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    _run(ledger, metrics_from_summary(_summary()))
+    with pytest.raises(ValueError):
+        resolve_baseline(ledger, "newest")
+    with pytest.raises(ValueError):
+        resolve_baseline(ledger, "median:x")
+
+
+# ---------------------------------------------------------------------------
+# Noise-aware comparison
+# ---------------------------------------------------------------------------
+
+
+def test_wall_noise_within_tolerance_is_not_a_regression(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, metrics_from_summary(_summary(wall_s=1.00)))
+    ok = _run(ledger, metrics_from_summary(_summary(wall_s=1.05)))  # +5% < 10%
+    bad = _run(ledger, metrics_from_summary(_summary(wall_s=1.50)))  # +50%
+    assert compare_runs(base, ok).ok
+    cmp_bad = compare_runs(base, bad)
+    assert [r.metric for r in cmp_bad.regressions] == ["wall_s"]
+    # the CI knob: scaling noisy tolerances absorbs shared-runner noise
+    assert compare_runs(base, bad, wall_tol_scale=6.0).ok
+
+
+def test_pass_fail_and_rows_are_deterministic_gates(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, metrics_from_summary(_summary()))
+    broke = _run(ledger, metrics_from_summary(_summary(ok=False, rows=0)))
+    got = {r.metric for r in compare_runs(base, broke).regressions}
+    assert got == {"ok", "rows"}
+
+
+def test_zero_baseline_movement_is_informational_not_astronomical(tmp_path):
+    """A 0.000-rounded baseline wall time must not turn epsilon-nonzero
+    into a +1e29% regression; the delta is reported, never gated, and its
+    JSON form stays strict (no Infinity)."""
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, {"bench/x": {"wall_s": 0.0}})
+    run = _run(ledger, {"bench/x": {"wall_s": 0.001}})
+    cmp_ = compare_runs(base, run)
+    assert cmp_.ok
+    (d,) = cmp_.deltas
+    assert d.rel_delta == float("inf") and not d.regressed
+    assert json.loads(json.dumps(cmp_.to_dict()))["deltas"][0]["rel_delta"] is None
+
+
+def test_record_sources_propagates_summary_failure_count(tmp_path):
+    """`repro.perf record --summary` of an aborted run must mark the run
+    unhealthy, or baseline resolution would anchor on its truncated walls."""
+    ledger = Ledger(str(tmp_path))
+    aborted = {**_summary(wall_s=0.1, ok=False), "failed": 1}
+    bad = ledger.record_sources(summary=aborted, env=ENV)
+    assert bad.meta["failed"] == 1
+    assert resolve_baseline(ledger, "latest", exclude=()) is None  # filtered
+
+
+def test_disjoint_keys_report_but_never_gate(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, {"bench/a": {"wall_s": 1.0}})
+    run = _run(ledger, {"bench/b": {"wall_s": 9.0}})
+    cmp_ = compare_runs(base, run)
+    assert cmp_.ok
+    assert cmp_.new_keys == ["bench/b"] and cmp_.missing_keys == ["bench/a"]
+
+
+# ---------------------------------------------------------------------------
+# Golden triage: synthetic Events deltas -> all four PerfClass outcomes
+# ---------------------------------------------------------------------------
+
+
+def _point(name, flops, bytes_, gather=0.0, nonvec=0.0):
+    """One trajectory point derived from synthetic artifact Events."""
+    ev = Events()
+    ev.flops = flops
+    ev.bytes_accessed = bytes_
+    ev.hbm_read_bytes = bytes_ / 2
+    ev.gather_bytes = gather
+    ev.nonvec_flops = nonvec
+    return analyze_events(name, ev, hw.GRACE_CORE, dtype="fp32")
+
+
+# before: a healthy compute-bound kernel (Class 4, AI = 1000)
+_BEFORE = ("k", 1e9, 1e6)
+# after-deltas chosen to land on each Fig. 8 leaf
+_GOLDEN = [
+    # vectorizable share collapses (threading-runtime/serial growth): Class 1
+    (("k", 1e9, 1e6, 0.0, 0.95e9), PerfClass.NOT_VECTORIZED),
+    # streaming traffic blows up, AI falls left of the knee: Class 2
+    (("k", 1e9, 4e9), PerfClass.MEMORY_BANDWIDTH_BOUND),
+    # same blow-up but pointer-chasing (gather share > ELEN/line): Class 3
+    (("k", 1e9, 4e9, 1.5e9), PerfClass.MEMORY_LATENCY_BOUND),
+    # stays compute-bound but does 2x the FLOPs (redundant work): Class 4
+    (("k", 2e9, 1e6), PerfClass.SPEEDUP),
+]
+
+
+@pytest.mark.parametrize("after_args,expect_class", _GOLDEN)
+def test_triage_maps_events_deltas_onto_each_perf_class(
+    tmp_path, after_args, expect_class
+):
+    ledger = Ledger(str(tmp_path))
+    before = _point(*_BEFORE)
+    assert before.perf_class == PerfClass.SPEEDUP  # the healthy baseline
+    after = _point(*after_args)
+    assert after.perf_class == expect_class  # the synthetic delta lands
+    base = _run(ledger, metrics_from_analysis([before]))
+    run = _run(ledger, metrics_from_analysis([after]))
+    cmp_ = compare_runs(base, run)
+    assert not cmp_.ok
+    triages = triage_regressions(cmp_, base, run, tuning_store=None)
+    assert len(triages) == 1
+    t = triages[0]
+    # triage re-derives the same classes the pipeline computed
+    assert t.class_before == PerfClass.SPEEDUP
+    assert t.class_after == expect_class
+    # ... and justifies them with the Eq. 2 quantities
+    rl = adapted_roofline(hw.GRACE_CORE, "fp32")
+    assert t.ai_irv == pytest.approx(rl.ai_irv)
+    assert t.ai_irr == pytest.approx(rl.ai_irr)
+    assert "AI" in t.narrative and "AI_IRV" in t.narrative
+    if expect_class != PerfClass.SPEEDUP:
+        assert f"Class {int(expect_class)}" in t.narrative
+        assert "slipped from Class 4" in t.narrative
+
+
+def test_triage_flags_stale_tuning_record(tmp_path):
+    """A run recorded under one config while the tuning store's best is
+    another must name the stale TuningRecord as a suspect."""
+    from repro.tuning import TuningRecord, save_record
+
+    store = ArtifactStore(str(tmp_path / "tuning"))
+    save_record(store, TuningRecord(
+        kernel="gemm", chip="grace-core", dtype="fp32", fingerprint="ff" * 16,
+        config={"bm": 256, "bn": 256, "bk": 256},
+        default_config={"bm": 128, "bn": 128, "bk": 128},
+        best_time_s=1e-3, default_time_s=2e-3,
+    ))
+    ledger = Ledger(str(tmp_path / "perf"))
+    before = metrics_from_analysis([_point("kernel/gemm", 1e9, 1e6)])
+    after = metrics_from_analysis([_point("kernel/gemm", 1e9, 4e9)])
+    after["kernel/gemm@grace-core/fp32"]["config"] = "bk=128 bm=128 bn=128"
+    base, run = _run(ledger, before), _run(ledger, after)
+    cmp_ = compare_runs(base, run)
+    (t,) = triage_regressions(cmp_, base, run, tuning_store=store)
+    assert any("stale TuningRecord" in s for s in t.suspects)
+
+    # multiple persisted records per (kernel, chip, dtype) are normal
+    # (capped CI spaces, other problem shapes): a run whose config matches
+    # ANY of them is NOT stale — no false re-tune chase
+    save_record(store, TuningRecord(
+        kernel="gemm", chip="grace-core", dtype="fp32", fingerprint="ee" * 16,
+        config={"bm": 128, "bn": 128, "bk": 128},
+        default_config={"bm": 128, "bn": 128, "bk": 128},
+        best_time_s=1e-3, default_time_s=1e-3,
+    ))
+    (t2,) = triage_regressions(cmp_, base, run, tuning_store=store)
+    assert not any("stale TuningRecord" in s for s in t2.suspects)
+
+
+def test_triage_wall_only_regression_suspects_noise(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, {"bench/x": {"wall_s": 1.0, "rows": 5}})
+    run = _run(ledger, {"bench/x": {"wall_s": 2.0, "rows": 5}})
+    cmp_ = compare_runs(base, run)
+    (t,) = triage_regressions(cmp_, base, run, tuning_store=None)
+    assert t.class_before is None  # no counters to re-classify
+    assert any("noise" in s for s in t.suspects)
+
+
+def test_split_key():
+    assert split_key("kernel/gemm@grace-core/fp32") == (
+        "kernel/gemm", "grace-core", "fp32")
+    assert split_key("bench/fig3") == ("bench/fig3", None, None)
+
+
+# ---------------------------------------------------------------------------
+# The gate
+# ---------------------------------------------------------------------------
+
+
+def test_gate_first_run_passes_trivially(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    g = gate_run(r1, ledger)
+    assert g.ok and g.exit_code == 0 and g.baseline_id is None
+    assert "no baseline" in g.note
+
+
+def test_gate_latest_walks_back_to_a_comparable_run(tmp_path):
+    """A heterogeneous ledger (benchmark runs + service reports) must not
+    turn the gate vacuous: 'latest' falls back past a disjoint record to
+    the newest run that shares metrics with the run under test."""
+    ledger = Ledger(str(tmp_path))
+    _run(ledger, metrics_from_summary(_summary(wall_s=1.0)))  # comparable
+    _run(ledger, metrics_from_analysis([_point("k", 1e9, 1e6)]))  # disjoint
+    slow = _run(ledger, metrics_from_summary(_summary(wall_s=9.0)))
+    g = gate_run(slow, ledger, tuning_store=None)
+    assert not g.ok  # the +800% wall regression was NOT masked
+    assert "fell back" in g.note
+
+
+def test_gate_with_fully_disjoint_baseline_is_loudly_vacuous(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    _run(ledger, metrics_from_analysis([_point("k", 1e9, 1e6)]))
+    other = _run(ledger, {"bench/other": {"wall_s": 1.0}})
+    g = gate_run(other, ledger, tuning_store=None)
+    assert g.ok and "VACUOUS" in g.note and "VACUOUS" in g.describe()
+
+
+def test_failed_runs_never_become_latest_or_median_baselines(tmp_path):
+    """An aborted benchmark run (meta['failed']) records a truncated wall
+    time; anchoring on it would fail the next healthy run spuriously."""
+    ledger = Ledger(str(tmp_path))
+    good = _run(ledger, metrics_from_summary(_summary(wall_s=5.0)))
+    ledger.record(metrics_from_summary(_summary(wall_s=0.1, ok=False)),
+                  env=ENV, meta={"failed": 1})
+    healthy = _run(ledger, metrics_from_summary(_summary(wall_s=5.2)))
+    assert resolve_baseline(
+        ledger, "latest", exclude=(healthy.run_id,)
+    ).run_id == good.run_id
+    base = resolve_baseline(ledger, "median:3", exclude=(healthy.run_id,))
+    assert base.metric("bench/fig3_vectorization", "wall_s") == 5.0
+    assert gate_run(healthy, ledger, tuning_store=None).ok
+    # pinned: stays the operator's explicit (unfiltered) choice
+    runs = ledger.runs()
+    assert resolve_baseline(
+        ledger, f"pinned:{runs[1].run_id[:12]}"
+    ).run_id == runs[1].run_id
+
+
+def test_trajectory_export_disambiguates_seq_collisions(tmp_path):
+    """Two concurrent recorders landing on one seq both keep an export."""
+    ledger = Ledger(str(tmp_path / "perf"))
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    clash = dataclasses.replace(r1, run_id="ff" * 16, timestamp=r1.timestamp + 1)
+    ledger.store.put_json(clash.run_id, {
+        "kind": "perf_run", "perf_version": 1, "run": clash.to_dict(),
+    })
+    paths = export_trajectory(ledger, str(tmp_path / "export"))
+    names = [os.path.basename(p) for p in paths]
+    assert names == ["BENCH_1.json", "BENCH_1_ffffffff.json"]
+
+
+def test_gate_is_series_scoped(tmp_path):
+    """A bf16 run never gates against an fp32 baseline (the trajectory is
+    keyed by (chip, dtype) — Stephens et al.'s moving-target axis)."""
+    ledger = Ledger(str(tmp_path))
+    _run(ledger, metrics_from_summary(_summary(wall_s=1.0)))
+    slow16 = _run(ledger, metrics_from_summary(_summary(wall_s=9.0)),
+                  env=dataclasses.replace(ENV, dtype="bf16"))
+    assert gate_run(slow16, ledger).ok  # first bf16 point: nothing to regress
+
+
+def test_gate_unresolved_pin_fails_instead_of_going_green(tmp_path):
+    """A typo'd/garbage-collected pin must be an error, not a trivial pass
+    — otherwise the gate silently checks nothing forever."""
+    ledger = Ledger(str(tmp_path))
+    r1 = _run(ledger, metrics_from_summary(_summary()))
+    g = gate_run(r1, ledger, policy="pinned:deadbee")
+    assert not g.ok and g.exit_code == 1
+    assert "did not resolve" in g.note and "FAIL" in g.describe()
+
+
+def test_malformed_policy_fails_fast(tmp_path):
+    from repro.perf.baseline import validate_policy
+
+    for bad in ("median:x", "median:0", "pinned:", "newest"):
+        with pytest.raises(ValueError):
+            validate_policy(bad)
+    # the perf CLI rejects it at argparse time (exit 2), ledger untouched
+    from repro.perf.__main__ import main
+
+    with pytest.raises(SystemExit) as exc:
+        main(["--store-dir", str(tmp_path), "gate", "--baseline", "median:x"])
+    assert exc.value.code == 2
+    # benchmarks.run validates BEFORE running any benchmark
+    from benchmarks.run import main as bench_main
+
+    assert bench_main(["--gate", "--baseline", "newest"]) == 2
+
+
+def test_vanished_metric_is_reported_in_comparison_and_note(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, {"bench/x": {"wall_s": 1.0, "rows": 5}})
+    run = _run(ledger, {"bench/x": {"rows": 5, "extra": 1.0}})
+    cmp_ = compare_runs(base, run)
+    assert cmp_.missing_metrics == ["bench/x.wall_s"]
+    assert cmp_.new_metrics == ["bench/x.extra"]
+    g = gate_run(run, ledger, tuning_store=None)
+    assert g.ok and "metrics vanished" in g.note  # loud, but not a verdict flip
+
+
+def test_gate_result_round_trips_to_json(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, metrics_from_analysis([_point("k", 1e9, 1e6)]))
+    run = _run(ledger, metrics_from_analysis([_point("k", 1e9, 4e9)]))
+    g = gate_run(run, ledger, tuning_store=None)
+    payload = json.loads(json.dumps(g.to_dict()))
+    assert payload["ok"] is False and payload["exit_code"] == 1
+    assert payload["baseline_id"] == base.run_id
+    assert payload["triage"][0]["class_transition"].startswith("Class 4")
+
+
+def test_markdown_and_trajectory_export(tmp_path):
+    ledger = Ledger(str(tmp_path / "perf"))
+    _run(ledger, metrics_from_summary(_summary(wall_s=1.0)))
+    r2 = _run(ledger, metrics_from_summary(_summary(wall_s=5.0)))
+    g = gate_run(r2, ledger, tuning_store=None)
+    md = format_markdown(ledger, gate=g)
+    assert "# Performance trajectory" in md and "FAIL" in md
+    assert r2.run_id[:12] in md
+    out = str(tmp_path / "export")
+    paths = export_trajectory(ledger, out)
+    assert [os.path.basename(p) for p in paths] == ["BENCH_1.json", "BENCH_2.json"]
+    point = json.load(open(paths[1]))
+    assert point["kind"] == "perf_trajectory_point"
+    assert BenchRun.from_dict(point["run"]).run_id == r2.run_id
+
+
+# ---------------------------------------------------------------------------
+# End-to-end gate contract (the ISSUE-4 acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_end_to_end_gate_contract(tmp_path):
+    """record -> perturb a kernel's traffic -> gate exits non-zero naming
+    the PerfClass transition with AI vs AI_IRV; the unperturbed re-run
+    exits zero AND performs zero recompiles (store-backed)."""
+    events_store = str(tmp_path / "events")
+    ledger = Ledger(str(tmp_path / "perf"))
+    wl = get_workload("kernel/gemm")
+
+    # -- run 1: the healthy baseline, compiled through a persistent store
+    cache1 = ArtifactCache(store=events_store)
+    a1 = analyze(wl, hw.GRACE_CORE, source="compiled", cache=cache1)
+    assert cache1.compiles == 1
+    run1 = ledger.record(metrics_from_analysis([a1]), env=ENV)
+    assert gate_run(run1, ledger, tuning_store=None).ok  # nothing to regress
+
+    # -- run 2: a perturbed config re-streams operands (the stale-tile
+    # failure mode): same workload name/chip/dtype, 64x the HBM traffic
+    bad = dataclasses.replace(
+        wl, flops=a1.events.flops, hbm_bytes=a1.events.bytes_accessed * 64,
+    )
+    a2 = analyze(bad, hw.GRACE_CORE, source="analytic")
+    run2 = ledger.record(metrics_from_analysis([a2]), env=ENV)
+    g2 = gate_run(run2, ledger, tuning_store=None)
+    assert not g2.ok and g2.exit_code != 0
+    (t,) = [t for t in g2.triages if t.key.startswith("kernel/gemm")]
+    rl = adapted_roofline(hw.GRACE_CORE, "fp32")
+    assert t.class_before == PerfClass.SPEEDUP
+    assert t.class_after in (PerfClass.MEMORY_BANDWIDTH_BOUND,
+                             PerfClass.MEMORY_LATENCY_BOUND)
+    # the Eq. 2 justification: AI crossed the scalar knee (the Fig. 8
+    # stage-2 threshold), and both inflection points are reported
+    assert t.ai_after < rl.ai_irr <= t.ai_before
+    assert t.ai_irv == pytest.approx(rl.ai_irv)
+    assert "AI_IRV" in t.narrative and "Class" in t.narrative
+
+    # -- run 3: unperturbed re-run in a fresh cache (= a fresh process):
+    # store hit, ZERO compiles, and the gate against the healthy baseline
+    # exits zero
+    cache2 = ArtifactCache(store=events_store)
+    a3 = analyze(wl, hw.GRACE_CORE, source="compiled", cache=cache2)
+    assert cache2.compiles == 0 and cache2.store_hits == 1
+    run3 = ledger.record(metrics_from_analysis([a3]), env=ENV)
+    g3 = gate_run(run3, ledger, policy=f"pinned:{run1.run_id[:12]}",
+                  tuning_store=None)
+    assert g3.ok and g3.exit_code == 0
+
+
+# ---------------------------------------------------------------------------
+# Cross-process: a second `record` run appends, never rewrites
+# ---------------------------------------------------------------------------
+
+
+def test_second_record_process_appends_never_rewrites(tmp_path):
+    summary_path = tmp_path / "summary.json"
+    summary_path.write_text(json.dumps({**_summary(), "env": ENV.to_dict()}))
+    env = {**os.environ, "PYTHONPATH": "src",
+           "REPRO_ARTIFACT_DIR": str(tmp_path / "artifacts")}
+    for _ in range(2):
+        subprocess.run(
+            [sys.executable, "-m", "repro.perf", "record",
+             "--summary", str(summary_path)],
+            capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+            check=True, timeout=120,
+        )
+        if _ == 0:
+            ledger = Ledger(str(tmp_path / "artifacts" / "perf"))
+            (first,) = ledger.runs()
+            first_path = ledger.store.path_for(first.run_id)
+            first_bytes = open(first_path, "rb").read()
+    runs = Ledger(str(tmp_path / "artifacts" / "perf")).runs()
+    assert [r.seq for r in runs] == [1, 2]
+    assert runs[0].run_id != runs[1].run_id
+    # byte-identical first entry: append-only held across processes
+    assert open(first_path, "rb").read() == first_bytes
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    """`python -m repro.perf gate` exits 0 on pass, 1 on regression."""
+    from repro.perf.__main__ import main
+
+    root = str(tmp_path / "perf")
+    ledger = Ledger(root)
+    _run(ledger, metrics_from_analysis([_point("k", 1e9, 1e6)]))
+    assert main(["--store-dir", root, "gate", "--no-tuning-store"]) == 0
+    _run(ledger, metrics_from_analysis([_point("k", 1e9, 4e9)]))
+    out = str(tmp_path / "gate.json")
+    assert main(["--store-dir", root, "gate", "--no-tuning-store",
+                 "--out", out]) == 1
+    payload = json.load(open(out))
+    assert payload["ok"] is False
+    assert payload["triage"][0]["class_transition"] is not None

@@ -94,6 +94,27 @@ def lane_utilization(
     return min(1.0, useful_elements / (issues * lanes))
 
 
+def slot_utilization(
+    busy_slot_steps: float, steps: float, slots: int
+) -> float:
+    """Fraction of serving slots doing useful work across a batch of fused
+    decode steps — Eq. 1's lane utilization lifted to the serving layer.
+
+    A fused decode step is a vector issue whose "lanes" are the batch
+    slots; a slot is busy when it carries a live request (consuming prompt
+    or generating) and idle when it is drained, finished-but-waiting
+    (lockstep waves), or unfilled.  ``busy_slot_steps`` counts busy
+    (slot, step) pairs; the denominator is ``steps * slots``, exactly as
+    :func:`lane_utilization` divides useful elements by issues x lanes.
+    Continuous batching is to this metric what predicated loops are to
+    lane utilization: finished slots are refilled (masked and reassigned)
+    instead of waited on.
+    """
+    if steps <= 0 or slots <= 0:
+        return 0.0
+    return min(1.0, busy_slot_steps / (steps * slots))
+
+
 def arithmetic_intensity(flops: float, hbm_bytes: float) -> float:
     """AI = FLOPs / bytes moved from main memory (paper Sec. 3.3)."""
     if hbm_bytes <= 0:

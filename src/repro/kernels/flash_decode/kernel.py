@@ -104,3 +104,99 @@ def flash_decode(
         ],
         interpret=interpret,
     )(q, kt, vt, valid_len)
+
+
+def _decode_kernel_paged(bt_ref, q_ref, k_ref, v_ref, vl_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, ns: int):
+    """Same online-softmax body as :func:`_decode_kernel`; the KV tile for
+    logical block ``si`` of sequence ``b`` is DMA'd from pool block
+    ``bt_ref[b, si]`` (scalar-prefetched block table drives the index_map),
+    so the kernel streams a non-contiguous paged cache without ever
+    materializing a gathered copy."""
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = vl_ref[0]
+    q = q_ref[0, 0]  # (G, D)
+    k = k_ref[0, 0]  # (bs, D) — one pool block
+    v = v_ref[0, 0]
+    D = q.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    pred = pos < valid  # per-slot length predication
+
+    @pl.when(si * bs < valid)
+    def _work():
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(pred[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_ref[...], s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_paged(
+    q: jax.Array,            # (B, KV, G, D)
+    k_pool: jax.Array,       # (n_blocks, block_size, KV, D)
+    v_pool: jax.Array,       # (n_blocks, block_size, KV, D)
+    block_tables: jax.Array,  # (B, nb) int32 — logical -> pool block map
+    valid_len: jax.Array,    # (B,) int32 — live length per slot, >= 1
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Flash-decode over a PAGED cache: the continuous-batching serve path.
+
+    Each slot's KV lives in ``valid_len[b] / block_size`` pool blocks named
+    by its block-table row; the kernel walks logical blocks, prefetching
+    the table so the BlockSpec index_map resolves the indirection at DMA
+    time.  Fully-masked logical blocks (beyond the slot's live prefix) are
+    never issued — the same predication economics as the contiguous
+    kernel, now compounded with block reuse across requests.  Slots with
+    ``valid_len == 0`` produce unspecified output (they have no live
+    tokens to attend over); the serving engine masks such slots itself.
+    """
+    B, KV, G, D = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    kernel = functools.partial(_decode_kernel_paged, bs=bs, ns=nb)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kt = k_pool.transpose(0, 2, 1, 3)  # (n_blocks, KV, bs, D): head-major
+    vt = v_pool.transpose(0, 2, 1, 3)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s, bt: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h, s, bt: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, q, kt, vt, valid_len)

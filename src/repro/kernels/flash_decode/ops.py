@@ -1,7 +1,15 @@
-"""Flash-decode kernel call surface (served by the kernel registry)."""
+"""Flash-decode kernel call surface (served by the kernel registry).
+
+``flash_decode`` is the registry-managed contiguous-cache op.  The paged
+variant (block-table indirection via scalar prefetch, the continuous-
+batching serve path) is exported directly from the kernel module — its
+block-pool calling convention doesn't fit the registry's
+same-shaped-ref contract for event capture.
+"""
 
 from __future__ import annotations
 
+from repro.kernels.flash_decode.kernel import flash_decode_paged
 from repro.kernels.registry import FLASH_DECODE as flash_decode
 
-__all__ = ["flash_decode"]
+__all__ = ["flash_decode", "flash_decode_paged"]

@@ -23,6 +23,18 @@ def decode_ref(q, k, v, valid_len):
     return out.astype(q.dtype)
 
 
+def decode_paged_ref(q, k_pool, v_pool, block_tables, valid_len):
+    """Paged oracle: gather each slot's logical view, then run the dense
+    reference.  q (B,KV,G,D); k/v_pool (n_blocks, bs, KV, D); block_tables
+    (B, nb); valid_len (B,) with every live slot >= 1."""
+    B = q.shape[0]
+    nb = block_tables.shape[1]
+    bs = k_pool.shape[1]
+    k = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
+    return decode_ref(q, k, v, valid_len)
+
+
 def flops_bytes(B, KV, G, D, valid_len, dtype_bytes: int = 2) -> dict:
     """Per decode step: 2*2*H*D flops per live cache token; traffic = live
     K+V reads (the q/output traffic is negligible)."""

@@ -1,39 +1,78 @@
 """Serving driver: load (or init) a model, run batched requests.
 
 Usage:
-    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-124m --smoke \
-        --requests 8 --max-new 12
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2-124m \\
+        --scheduler continuous --requests 8 --max-new 12
+
+``--scheduler wave`` runs the legacy lockstep scheduler (the golden
+baseline); the default continuous scheduler refills slots mid-flight over
+the paged KV cache.  ``--record`` appends the serving metrics (tok/s,
+p50/p95 request latency, slot utilization) to the perf trajectory ledger,
+where ``python -m repro.perf report`` renders them; ``--out`` writes the
+full machine-readable serve report.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import numpy as np
 
 import repro.configs as configs
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import SCHEDULERS, Request, ServeEngine
 from repro.train import steps as steps_mod
+
+
+def build_report(args: argparse.Namespace, engine: ServeEngine) -> dict:
+    """Machine-readable serve report (the ledger's serving source)."""
+    return {
+        "kind": "serve_report",
+        "arch": args.arch,
+        "scheduler": engine.scheduler,
+        "max_batch": engine.max_batch,
+        "max_len": engine.max_len,
+        "block_size": engine.block_size,
+        "stats": engine.stats(),
+        "requests": [
+            {
+                "uid": r.uid,
+                "prompt_len": int(len(r.prompt)),
+                "new_tokens": len(r.generated),
+                "latency_s": r.latency_s,
+            }
+            for _, r in sorted(engine.completed.items())
+        ],
+    }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt2-124m")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="smoke-sized config (--no-smoke for the real one)")
+    ap.add_argument("--scheduler", choices=list(SCHEDULERS),
+                    default="continuous")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write the serve report JSON here")
+    ap.add_argument("--record", action="store_true",
+                    help="append serving metrics to the perf ledger")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     params = steps_mod.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
-                         max_len=args.max_len)
+                         max_len=args.max_len, scheduler=args.scheduler,
+                         block_size=args.block_size)
 
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
@@ -43,16 +82,34 @@ def main(argv=None) -> int:
             prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
             max_new_tokens=args.max_new,
         ))
-    t0 = time.time()
     done = engine.run_until_drained()
-    dt = time.time() - t0
-    total_new = sum(len(r.generated) for r in done.values())
-    print(f"served {len(done)} requests, {total_new} tokens, "
-          f"{engine.steps} fused steps in {dt:.2f}s "
-          f"({total_new/max(dt,1e-9):.1f} tok/s)")
+    stats = engine.stats()
+    print(f"[{args.scheduler}] served {stats['requests']} requests, "
+          f"{stats['new_tokens']} tokens, {stats['fused_steps']} fused steps "
+          f"in {stats['wall_s']:.2f}s ({stats['tok_s']:.1f} tok/s)")
+    print(f"  slot utilization {stats['slot_utilization']:.3f} "
+          f"({stats['busy_slot_steps']}/{stats['slot_steps']} slot-steps), "
+          f"latency p50 {stats['p50_latency_s']:.3f}s "
+          f"p95 {stats['p95_latency_s']:.3f}s")
     for uid in sorted(done):
         r = done[uid]
-        print(f"  req {uid}: prompt[{len(r.prompt)}] -> {r.generated}")
+        lat = f"{r.latency_s:.3f}s" if r.latency_s is not None else "n/a"
+        print(f"  req {uid}: prompt[{len(r.prompt)}] latency {lat} "
+              f"-> {r.generated}")
+
+    report = build_report(args, engine)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"serve report -> {args.out}")
+    if args.record:
+        from repro.perf.ledger import default_ledger
+
+        run = default_ledger().record_sources(
+            serving=report, meta={"argv": " ".join(argv or [])} if argv else None,
+        )
+        print(f"recorded serving run {run.run_id} (seq {run.seq}) "
+              f"-> perf ledger")
     return 0
 
 

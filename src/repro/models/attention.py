@@ -90,16 +90,20 @@ def attention_decode(params, cfg, x, cache_k, cache_v, pos):
     """One-token decode step — READ-ONLY on the cache.
 
     x: (B, 1, d); cache_k/v: (B, S, KV, D); pos: scalar int32 — current
-    length.  Returns (y, k_new, v_new): the (B, 1, KV, D) slices for the
-    new token.  The caller commits all layers' slices with ONE
-    dynamic_update_slice on the stacked cache (a per-layer in-scan
+    length — or a (B,) int32 vector of PER-SLOT lengths (continuous
+    batching: every serving slot sits at its own cache position, the
+    predication idea at the slot level).  Returns (y, k_new, v_new): the
+    (B, 1, KV, D) slices for the new token.  The caller commits all
+    layers' slices with ONE dynamic_update_slice (wave mode) or per-slot
+    scatter (paged mode) on the stacked cache (a per-layer in-scan
     read-modify-write would materialize an unaliased full-cache copy per
     layer on backends without scan buffer donation).
     """
     B, _, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     g = h // kv
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None]
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     S = cache_k.shape[1]
     q = q.reshape(B, 1, kv, g, hd)
@@ -107,8 +111,9 @@ def attention_decode(params, cfg, x, cache_k, cache_v, pos):
     s_old = jnp.einsum(
         "bqkgd,bskd->bkgqs", q, cache_k, preferred_element_type=jnp.float32
     ) * scale
-    mask = jnp.arange(S)[None, :] < pos  # strictly-older tokens from cache
-    s_old = jnp.where(mask[None, None, None, :, :], s_old, NEG_INF)
+    # strictly-older tokens from each slot's own live prefix
+    mask = jnp.arange(S)[None, :] < pos_b[:, None]  # (B, S)
+    s_old = jnp.where(mask[:, None, None, None, :], s_old, NEG_INF)
     s_new = jnp.einsum(
         "bqkgd,bskd->bkgqs", q, k_new, preferred_element_type=jnp.float32
     ) * scale  # (B,KV,G,1,1): self-attention of the incoming token

@@ -101,13 +101,16 @@ def init_mla_cache(cfg, batch: int, max_len: int, dtype, layers_stacked: int = 1
 def mla_decode(params, cfg, x, cache_c, cache_kr, pos):
     """Absorbed one-token decode over the compressed cache — READ-ONLY.
 
-    x: (B,1,d); cache_c: (B,S,lora); cache_kr: (B,S,rope).
+    x: (B,1,d); cache_c: (B,S,lora); cache_kr: (B,S,rope); pos: scalar
+    int32 length, or a (B,) vector of per-slot lengths (continuous
+    batching over the paged latent cache).
     Returns (y, c_new (B,1,lora), kr_new (B,1,rope)); the caller commits the
     new-token slices into the stacked cache once per step.
     """
     B = x.shape[0]
     h, ml = cfg.n_heads, cfg.mla
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None]
     q_nope, q_rope, c_new, kr_new = _q_and_latent(params, cfg, x, positions)
     S = cache_c.shape[1]
     # absorb W_uk into the query: q_lat (B,1,h,lora)
@@ -118,8 +121,8 @@ def mla_decode(params, cfg, x, cache_c, cache_kr, pos):
         jnp.einsum("bqhl,bsl->bhqs", q_lat, cache_c, preferred_element_type=jnp.float32)
         + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr, preferred_element_type=jnp.float32)
     ) * scale
-    mask = jnp.arange(S)[None, :] < pos
-    s_old = jnp.where(mask[None, None, :, :], s_old, NEG_INF)
+    mask = jnp.arange(S)[None, :] < pos_b[:, None]  # (B, S) per-slot prefix
+    s_old = jnp.where(mask[:, None, None, :], s_old, NEG_INF)
     s_new = (
         jnp.einsum("bqhl,bsl->bhqs", q_lat, c_new, preferred_element_type=jnp.float32)
         + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_new, preferred_element_type=jnp.float32)

@@ -384,6 +384,207 @@ def decode_step(
     return logits, new_cache
 
 
+# --------------------------------------------------------------------------
+# serving: paged cache (slot-level continuous batching)
+# --------------------------------------------------------------------------
+
+#: Physical block 0 is reserved as the NULL block: block tables of idle
+#: serving slots point at it, so their (masked-out) scatter writes land in
+#: garbage space and can never corrupt a live request's cache.
+NULL_BLOCK = 0
+
+
+def init_paged_cache(
+    cfg: ModelConfig, slots: int, max_len: int, block_size: int
+) -> Dict[str, Any]:
+    """Paged cache pytree: attention caches become pooled blocks.
+
+    Sequence caches are laid out as a physical pool ``(nsb, n_blocks,
+    block_size, ...)`` addressed through an engine-owned block table
+    ``(slots, max_len // block_size)`` mapping each slot's logical block to
+    a pool block.  The pool holds ``1 + slots * max_len/block_size``
+    blocks — enough for every slot at full length plus the reserved
+    :data:`NULL_BLOCK` — so admission never fails and freed blocks are
+    recycled across requests.  SSM / conv states are O(1) per slot and stay
+    densely indexed by slot (there is nothing to page).
+    """
+    if max_len % block_size:
+        raise ValueError(f"max_len {max_len} not a multiple of block_size "
+                         f"{block_size}")
+    dtype = jnp.dtype(cfg.compute_dtype)
+    nsb = cfg.n_superblocks
+    n_blocks = 1 + slots * (max_len // block_size)
+    cache: Dict[str, Any] = {"blocks": {}}
+
+    def _attn_pool(stacked: int):
+        if cfg.mla is not None:
+            ml = cfg.mla
+            c = {
+                "c": jnp.zeros(
+                    (stacked, n_blocks, block_size, ml.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros(
+                    (stacked, n_blocks, block_size, ml.qk_rope_dim), dtype),
+            }
+        else:
+            kv, hd = cfg.n_kv_heads, cfg.head_dim
+            c = {
+                "k": jnp.zeros((stacked, n_blocks, block_size, kv, hd), dtype),
+                "v": jnp.zeros((stacked, n_blocks, block_size, kv, hd), dtype),
+            }
+        return c
+
+    for i, kind in enumerate(cfg.superblock):
+        if kind == LayerKind.ATTN:
+            c = _attn_pool(nsb)
+        else:
+            c = {
+                "ssm_state": jnp.zeros(
+                    (nsb, slots, cfg.ssm.n_heads(cfg.d_model), cfg.ssm.d_state,
+                     cfg.ssm.head_dim), jnp.float32,
+                ),
+                "conv_state": jnp.zeros(
+                    (nsb, slots, cfg.ssm.d_conv - 1,
+                     cfg.ssm.d_inner(cfg.d_model)
+                     + 2 * cfg.ssm.n_groups * cfg.ssm.d_state), dtype,
+                ),
+            }
+        cache["blocks"][f"slot{i}"] = c
+    if cfg.moe is not None and cfg.moe.first_dense:
+        cache["first_block"] = jax.tree.map(lambda a: a[0], _attn_pool(1))
+    return cache
+
+
+def _gather_paged(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Logical per-slot view of a block pool.
+
+    pool: (n_blocks, block_size, ...); block_tables: (B, nb) ->
+    (B, nb * block_size, ...).  Garbage rows (NULL_BLOCK, recycled blocks)
+    are fine: the attention mask hides everything >= the slot's position.
+    """
+    B, nb = block_tables.shape
+    g = pool[block_tables]  # (B, nb, block_size, ...)
+    return g.reshape((B, nb * pool.shape[1]) + pool.shape[2:])
+
+
+def _commit_paged(pool, delta, flat_idx, key: str, stacked: bool):
+    """Per-slot scatter write of one new-token slice into the block pool.
+
+    ``flat_idx`` (B,) indexes the flattened (n_blocks * block_size) token
+    axis; idle slots all alias NULL_BLOCK offsets, where duplicate writes
+    are harmless by construction.
+    """
+    if key not in _SEQ_CACHE_KEYS:
+        return delta.astype(pool.dtype)  # SSM states: full replace
+    if stacked:
+        nsb, n_blocks, bs = pool.shape[:3]
+        flat = pool.reshape((nsb, n_blocks * bs) + pool.shape[3:])
+        vals = delta.astype(pool.dtype)[:, :, 0]  # (nsb, B, ...)
+        return flat.at[:, flat_idx].set(vals).reshape(pool.shape)
+    n_blocks, bs = pool.shape[:2]
+    flat = pool.reshape((n_blocks * bs,) + pool.shape[2:])
+    vals = delta.astype(pool.dtype)[:, 0]  # (B, ...)
+    return flat.at[flat_idx].set(vals).reshape(pool.shape)
+
+
+def reset_paged_slots(cache: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
+    """Zero the SSM/conv state of every slot where ``mask`` (B,) is True.
+
+    Called when a finished slot is refilled with a new request: attention
+    blocks need no scrub (the per-slot mask hides stale tokens) but
+    recurrent state is accumulated, so a fresh request must start from
+    zeros.
+    """
+    def _scrub(slot_cache):
+        out = {}
+        for k, leaf in slot_cache.items():
+            if k in ("ssm_state", "conv_state"):
+                m = mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
+                out[k] = jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+            else:
+                out[k] = leaf
+        return out
+
+    new = dict(cache)
+    new["blocks"] = {s: _scrub(c) for s, c in cache["blocks"].items()}
+    return new
+
+
+def decode_step_paged(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+    positions: jax.Array,
+    block_tables: jax.Array,
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One continuous-batching serve step over the paged cache.
+
+    tokens: (B, 1); positions: (B,) per-slot cache lengths; block_tables:
+    (B, nb) logical->physical block map.  Each slot attends over its own
+    live prefix (mask ``< positions[slot]``) and the new token commits as a
+    per-slot scatter at ``positions[slot]`` — predication-style slot
+    accounting: finished/idle slots write into NULL_BLOCK and are masked
+    out rather than synchronized on.  Scheduling state (positions, tables,
+    allocator) lives with the caller; the cache holds only device pools.
+    """
+    pos_b = positions.astype(jnp.int32)
+    blk = jnp.take_along_axis(
+        block_tables, (pos_b // block_size)[:, None], axis=1
+    )[:, 0]
+    flat_idx = blk * block_size + pos_b % block_size  # (B,) pool token index
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+
+    def _view(c_slot):
+        """Gather logical per-slot views of this layer's sequence pools."""
+        return {
+            k: _gather_paged(leaf, block_tables) if k in _SEQ_CACHE_KEYS else leaf
+            for k, leaf in c_slot.items()
+        }
+
+    new_cache: Dict[str, Any] = {"blocks": None}
+    if "first_block" in params:
+        x, fb_delta = _apply_slot_decode(
+            params["first_block"], cfg, LayerKind.ATTN, False, x,
+            _view(cache["first_block"]), pos_b,
+        )
+        new_cache["first_block"] = {
+            k: _commit_paged(cache["first_block"][k], d, flat_idx, k,
+                             stacked=False)
+            for k, d in fb_delta.items()
+        }
+
+    def scan_body(x, inp):
+        p_blk, c_blk = inp
+        deltas = {}
+        for i, kind in enumerate(cfg.superblock):
+            x, delta = _apply_slot_decode(
+                p_blk[f"slot{i}"], cfg, kind, _slot_is_moe(cfg, i), x,
+                _view(c_blk[f"slot{i}"]), pos_b,
+            )
+            deltas[f"slot{i}"] = delta
+        return x, deltas
+
+    x, deltas = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = {
+        slot: {
+            k: _commit_paged(cache["blocks"][slot][k], d, flat_idx, k,
+                             stacked=True)
+            for k, d in slot_deltas.items()
+        }
+        for slot, slot_deltas in deltas.items()
+    }
+
+    _, norm_fn = layers.make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
 def prefill(
     params,
     cfg: ModelConfig,

@@ -1,8 +1,10 @@
 """Perf trajectory ledger + decision-tree regression gate.
 
 The layer that makes every other persistent artifact pay rent: benchmark
-``summary.json``, autotuner ``tuning.json``, and SVE analysis reports are
-ingested into an append-only, content-addressed ledger of
+``summary.json``, autotuner ``tuning.json``, SVE analysis reports, and
+serving reports (``python -m repro.launch.serve`` — tok/s, p50/p95 request
+latency, slot utilization) are ingested into an append-only,
+content-addressed ledger of
 :class:`~repro.perf.ledger.BenchRun` records (stamped with a
 :class:`~repro.perf.ledger.RunEnv` fingerprint: chip, dtype, git SHA, jax
 version, tuned-config hash), baselines are resolved by policy
@@ -34,6 +36,7 @@ from repro.perf.ledger import (  # noqa: F401
     default_perf_dir,
     git_sha,
     metrics_from_analysis,
+    metrics_from_serving,
     metrics_from_summary,
     metrics_from_tuning,
     tuned_state_hash,

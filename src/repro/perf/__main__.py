@@ -2,13 +2,15 @@
 
     python -m repro.perf record --summary experiments/bench/summary.json \\
         --tuning experiments/bench/tuning.json
+    python -m repro.perf record --serving experiments/bench/serve.json
     python -m repro.perf compare --baseline latest
     python -m repro.perf gate --baseline pinned:abc123 --tol-wall 2.0
     python -m repro.perf report --out experiments/bench/perf
     python -m repro.perf list
 
 ``record`` appends one BenchRun from any mix of ``summary.json`` /
-``tuning.json`` / analysis-service reports.  ``gate`` exits non-zero on
+``tuning.json`` / analysis-service reports / ``launch.serve`` serve
+reports.  ``gate`` exits non-zero on
 confirmed regressions and prints each one's decision-tree triage.
 ``report`` emits the markdown trajectory plus one machine-readable
 ``BENCH_<seq>.json`` per run.  The ledger lives in
@@ -55,9 +57,10 @@ def cmd_record(args: argparse.Namespace) -> int:
     summary = load(args.summary)
     tuning = load(args.tuning)
     analyses = load(args.analysis)
-    if summary is None and tuning is None and analyses is None:
-        print("error: pass at least one of --summary/--tuning/--analysis",
-              file=sys.stderr)
+    serving = load(args.serving)
+    if summary is None and tuning is None and analyses is None and serving is None:
+        print("error: pass at least one of "
+              "--summary/--tuning/--analysis/--serving", file=sys.stderr)
         return 2
     # a summary stamped by benchmarks.run carries its own RunEnv — honor it
     # (record never re-derives environment); capture only when absent
@@ -66,8 +69,8 @@ def cmd_record(args: argparse.Namespace) -> int:
         env = capture_env(chip=args.chip, dtype=args.dtype)
     ledger = _ledger(args)
     run = ledger.record_sources(
-        summary=summary, tuning=tuning, analyses=analyses, env=env,
-        meta={"note": args.note} if args.note else None,
+        summary=summary, tuning=tuning, analyses=analyses, serving=serving,
+        env=env, meta={"note": args.note} if args.note else None,
     )
     print(f"recorded run {run.run_id} (seq {run.seq}, series "
           f"{run.env.series_key()}, {len(run.metrics)} workloads) "
@@ -163,6 +166,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--tuning", default=None, help="autotuner tuning.json")
     p.add_argument("--analysis", default=None,
                    help="analysis service report JSON")
+    p.add_argument("--serving", default=None,
+                   help="launch.serve serve-report JSON")
     p.add_argument("--chip", default="grace-core")
     p.add_argument("--dtype", default="fp32")
     p.add_argument("--note", default=None, help="free-form run annotation")

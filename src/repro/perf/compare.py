@@ -54,6 +54,17 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("vectorizable_fraction", "lower", 0.02),
         MetricSpec("predicted_speedup", "lower", 0.02),
         MetricSpec("perf_class", "lower", 0.0),
+        # serving metrics (launch.serve reports): throughput / latency are
+        # wall-clock noisy; the scheduler counters are deterministic given
+        # the request trace, and slot utilization dropping means the
+        # scheduler started idling lanes — the Eq. 1 signal for serving
+        MetricSpec("tok_s", "lower", 0.15, noisy=True),
+        MetricSpec("p50_latency_s", "higher", 0.15, noisy=True),
+        MetricSpec("p95_latency_s", "higher", 0.20, noisy=True),
+        MetricSpec("slot_utilization", "lower", 0.02),
+        MetricSpec("fused_steps", "higher", 0.0),
+        MetricSpec("requests", "lower", 0.0),
+        MetricSpec("new_tokens", "lower", 0.0),
     )
 }
 

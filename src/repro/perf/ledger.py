@@ -276,6 +276,39 @@ def _metrics_from_analysis_dict(d: Mapping[str, Any]) -> Dict[str, Any]:
     return m
 
 
+#: Serving-report quantities the ledger tracks (see
+#: :meth:`repro.serve.engine.ServeEngine.stats`).  Slot utilization is the
+#: Eq. 1 lane-utilization analogue at the serving layer; fused_steps and
+#: the slot-step counters are deterministic given the request trace, so
+#: the gate holds them as tightly as the analytic counters.  ``wall_s``
+#: is deliberately NOT ingested: the shared spec table would gate it at
+#: the benchmark tolerance (10%), tighter than the serving timing specs
+#: (tok_s 15%, p95 20%) chosen to absorb short-smoke noise — it would
+#: always trip first and make them dead letters.
+_SERVING_METRICS = (
+    "requests", "new_tokens", "fused_steps", "busy_slot_steps",
+    "slot_steps", "slot_utilization", "tok_s",
+    "p50_latency_s", "p95_latency_s",
+)
+
+
+def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """One metric row per serve run from a ``serve_report`` payload
+    (:func:`repro.launch.serve.build_report`), keyed
+    ``serve/<arch>@<scheduler>`` so wave and continuous trajectories never
+    get conflated."""
+    stats = report.get("stats") or {}
+    key = (f"serve/{report.get('arch', '?')}"
+           f"@{report.get('scheduler', stats.get('scheduler', '?'))}")
+    row: Dict[str, Any] = {}
+    for name in _SERVING_METRICS:
+        if stats.get(name) is not None:
+            row[name] = (int(stats[name]) if name in (
+                "requests", "new_tokens", "fused_steps", "busy_slot_steps",
+                "slot_steps") else float(stats[name]))
+    return {key: row} if row else {}
+
+
 def metrics_from_analysis(
     analyses: Union[Mapping[str, Any], Iterable[Any]],
 ) -> Dict[str, Dict[str, Any]]:
@@ -366,6 +399,7 @@ class Ledger:
         summary: Optional[Mapping[str, Any]] = None,
         tuning: Optional[Mapping[str, Any]] = None,
         analyses: Union[Mapping[str, Any], Iterable[Any], None] = None,
+        serving: Optional[Mapping[str, Any]] = None,
         env: Optional[RunEnv] = None,
         meta: Optional[Mapping[str, Any]] = None,
     ) -> BenchRun:
@@ -381,6 +415,9 @@ class Ledger:
         if analyses is not None:
             metrics.update(metrics_from_analysis(analyses))
             sources.append("analysis")
+        if serving is not None:
+            metrics.update(metrics_from_serving(serving))
+            sources.append("serving")
         if env is None and summary is not None and summary.get("env"):
             env = RunEnv.from_dict(summary["env"])
         meta = {**(meta or {}), "sources": sources}

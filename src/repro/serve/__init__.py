@@ -8,6 +8,7 @@ its own module through the package import.
 
 _LAZY_EXPORTS = {
     "Request": "repro.serve.engine",
+    "RequestTooLong": "repro.serve.engine",
     "ServeEngine": "repro.serve.engine",
     "AnalysisRequest": "repro.serve.analysis_service",
     "AnalysisService": "repro.serve.analysis_service",

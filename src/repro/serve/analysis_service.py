@@ -1,7 +1,7 @@
 """Analysis-as-a-service: the one-call SVE pipeline behind a request queue.
 
-Mirrors :class:`repro.serve.engine.ServeEngine`'s structure — submit
-requests, admit them in waves of up to ``max_batch``, drain until the queue
+Mirrors :class:`repro.serve.engine.ServeEngine`'s legacy wave scheduler —
+submit requests, admit them in waves of up to ``max_batch``, drain until the queue
 is empty — but the unit of work is an *analysis request* (workload x chips x
 dtypes) instead of a decode request.  All waves share one
 :class:`~repro.analysis.pipeline.ArtifactCache`, by default backed by the

@@ -1,32 +1,56 @@
-"""Batched serving engine: iteration-level batched greedy decoding over a
-fixed-size KV cache, fed from a request queue.
+"""Slot-level continuously-batched serving engine over a paged KV cache.
 
-Requests are admitted in waves of up to ``max_batch``; a wave advances in
-LOCKSTEP — at global position t each slot consumes its own prompt token (if
-its prompt is longer than t) or its last generated token.  This keeps the
-scalar cache position uniform across the batch (correct by construction
-with the one-commit-per-step cache layout) while still exercising the real
-serving shape: one fused ``decode_step`` for the whole batch per token, the
-decode_* dry-run cell.  Ragged prompts are handled by per-slot switchover
-masking — the predication idea at the serving layer.
+The production serve path: a fixed set of ``max_batch`` slots advances
+through one fused :func:`~repro.models.transformer.decode_step_paged` per
+token, and every slot carries its OWN cache position.  When a request
+finishes (EOS or token budget) its slot is refilled from the queue on the
+very next step and its cache blocks return to a shared pool — finished
+slots are masked out and reassigned, never waited on.  This is the paper's
+predication insight (Eq. 1: keep the lanes busy) executed at the serving
+layer, where a fused decode step is the vector issue and the batch slots
+are its lanes; :func:`repro.core.metrics.slot_utilization` reports the
+resulting busy-lane fraction.
 
-A slot-level continuously-batched engine (per-slot write indices + scatter
-commits + paged cache blocks) is the production extension; the fused-step /
-fixed-slot structure here is its inner loop.
+The KV cache is PAGED: attention caches live in a physical block pool
+addressed through per-slot block tables (``block_size`` tokens per block,
+block 0 reserved as the null block idle slots write into), so a slot's
+logical cache never moves when requests of different lengths come and go,
+and blocks freed by one request are immediately reused by the next.
+Scheduling state — positions, block tables, the free list — is host-side
+numpy ("slot accounting"); only the pools live on device, and the fused
+step is compiled exactly once per engine.
+
+``scheduler="wave"`` keeps the legacy lockstep behavior (admit a wave,
+run every slot to the wave's horizon) as the golden-equivalence baseline:
+both schedulers feed identical per-request token sequences, so greedy
+outputs must match token-for-token while the continuous scheduler spends
+strictly fewer fused steps on ragged workloads.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import LayerKind, ModelConfig
+from repro.core import metrics as core_metrics
 from repro.models import transformer
+
+SCHEDULERS = ("continuous", "wave")
+
+
+class RequestTooLong(ValueError):
+    """Raised at submit() time when prompt + budget exceed one slot's cache.
+
+    Typed and early on purpose: under the old in-wave ``assert`` a single
+    oversized request crashed the whole wave it was batched into.
+    """
 
 
 @dataclasses.dataclass
@@ -40,26 +64,89 @@ class Request:
         self.prompt = np.asarray(self.prompt, np.int32)
         self.generated: List[int] = []
         self.done = False
+        self.submitted_s: Optional[float] = None
+        self.started_s: Optional[float] = None
+        self.finished_s: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit -> finish wall time (includes queue wait — the quantity
+        continuous batching exists to shrink)."""
+        if self.submitted_s is None or self.finished_s is None:
+            return None
+        return self.finished_s - self.submitted_s
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, scheduler: str = "continuous",
+                 block_size: int = 16):
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
+                             f"got {scheduler!r}")
+        if scheduler == "continuous" and max_len % block_size:
+            # wave mode uses the dense cache and never touches the pool
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"block_size {block_size}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.queue: deque = deque()
+        self.scheduler = scheduler
+        self.block_size = block_size
+        self.queue: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
+        # slot accounting (Eq. 1 analogue): fused steps are vector issues,
+        # slots are lanes, busy_slot_steps counts the useful lane-steps
         self.steps = 0
+        self.busy_slot_steps = 0
+        self.wall_s = 0.0
+        #: uid -> physical block ids the request occupied, in allocation
+        #: order (pool-reuse introspection; continuous scheduler only)
+        self.block_history: Dict[int, List[int]] = {}
         self._decode = jax.jit(
             lambda p, t, c: transformer.decode_step(p, cfg, t, c)
         )
+        self._decode_paged = jax.jit(
+            lambda p, t, c, pos, bt: transformer.decode_step_paged(
+                p, cfg, t, c, pos, bt, block_size=block_size
+            )
+        )
+        self._reset_slots = jax.jit(transformer.reset_paged_slots)
+        self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
+
+    # -- bookkeeping -----------------------------------------------------------
+
+    @property
+    def total_slot_steps(self) -> int:
+        return self.steps * self.max_batch
+
+    @property
+    def slot_utilization(self) -> float:
+        return core_metrics.slot_utilization(
+            self.busy_slot_steps, self.steps, self.max_batch
+        )
 
     def submit(self, req: Request) -> None:
+        horizon = len(req.prompt) + req.max_new_tokens
+        if horizon > self.max_len:
+            raise RequestTooLong(
+                f"request {req.uid}: prompt[{len(req.prompt)}] + "
+                f"max_new_tokens[{req.max_new_tokens}] = {horizon} exceeds "
+                f"the per-slot cache ({self.max_len} tokens)"
+            )
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        req.submitted_s = time.time()
         self.queue.append(req)
 
-    # -- one wave -------------------------------------------------------------
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        if req.finished_s is None:
+            req.finished_s = time.time()
+        self.completed[req.uid] = req
+
+    # -- wave scheduler (legacy lockstep, golden baseline) ---------------------
 
     def _run_wave(self, wave: List[Request]) -> None:
         B = self.max_batch
@@ -70,12 +157,15 @@ class ServeEngine:
         horizon = int(max(
             len(r.prompt) + r.max_new_tokens for r in wave
         ))
-        assert horizon <= self.max_len, "wave exceeds cache"
+        if horizon > self.max_len:  # unreachable: submit() already rejects
+            raise RequestTooLong(f"wave horizon {horizon} > {self.max_len}")
         tokens = np.zeros((B, 1), np.int32)
         for s, r in enumerate(wave):
             tokens[s, 0] = r.prompt[0]
+            r.started_s = time.time()
 
         for t in range(horizon - 1):
+            self.busy_slot_steps += sum(1 for r in wave if not r.done)
             logits, cache = self._decode(self.params, jnp.asarray(tokens), cache)
             self.steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
@@ -90,21 +180,131 @@ class ServeEngine:
                     tokens[s, 0] = tok
                     if (len(r.generated) >= r.max_new_tokens or tok == r.eos_id):
                         r.done = True
+                        r.finished_s = time.time()
             if all(r.done for r in wave):
                 break
         for r in wave:
-            r.done = True
-            self.completed[r.uid] = r
+            self._finish(r)
 
-    # -- public ----------------------------------------------------------------
-
-    def run_until_drained(self, max_waves: int = 1000) -> Dict[int, Request]:
+    def _drain_waves(self, max_waves: int) -> None:
         waves = 0
         while self.queue:
+            if waves >= max_waves:
+                raise RuntimeError("serve loop did not drain")
             wave = [self.queue.popleft()
                     for _ in range(min(self.max_batch, len(self.queue)))]
             self._run_wave(wave)
             waves += 1
-            if waves > max_waves:
+
+    # -- continuous scheduler (per-slot positions, paged blocks) ---------------
+
+    def _drain_continuous(self, max_steps: Optional[int]) -> None:
+        B, bs = self.max_batch, self.block_size
+        nb_slot = self.max_len // bs
+        if max_steps is None:
+            # exact occupancy bound: a request holds its slot for at most
+            # prompt + max_new - 1 steps, so total work is a hard cap
+            max_steps = sum(
+                len(r.prompt) + r.max_new_tokens for r in self.queue
+            ) + B
+        cache = transformer.init_paged_cache(self.cfg, B, self.max_len, bs)
+        positions = np.zeros(B, np.int32)
+        block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
+        free: Deque[int] = deque(range(1, 1 + B * nb_slot))
+        slot_req: List[Optional[Request]] = [None] * B
+        tokens = np.zeros((B, 1), np.int32)
+        reset_mask = np.zeros(B, bool)
+
+        while True:
+            # refill: finished slots take the next queued request NOW —
+            # the lane is re-predicated, not idled until a wave drains
+            for b in range(B):
+                if slot_req[b] is None and self.queue:
+                    r = self.queue.popleft()
+                    slot_req[b] = r
+                    r.started_s = time.time()
+                    positions[b] = 0
+                    block_tables[b] = 0
+                    tokens[b, 0] = r.prompt[0]
+                    reset_mask[b] = True
+            if all(r is None for r in slot_req):
+                break
+            if self.steps >= max_steps:
                 raise RuntimeError("serve loop did not drain")
+            # allocate the write block for any slot whose position entered
+            # an unmapped logical block (covers fresh admissions at 0 too)
+            for b, r in enumerate(slot_req):
+                if r is not None:
+                    j = positions[b] // bs
+                    if block_tables[b, j] == 0:
+                        blk = free.popleft()
+                        block_tables[b, j] = blk
+                        self.block_history.setdefault(r.uid, []).append(blk)
+            if self._has_state and reset_mask.any():
+                cache = self._reset_slots(cache, jnp.asarray(reset_mask))
+            reset_mask[:] = False
+
+            self.busy_slot_steps += sum(1 for r in slot_req if r is not None)
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(tokens), cache,
+                jnp.asarray(positions), jnp.asarray(block_tables),
+            )
+            self.steps += 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
+            for b, r in enumerate(slot_req):
+                if r is None:
+                    continue
+                t = int(positions[b])
+                positions[b] = t + 1
+                if t + 1 < len(r.prompt):
+                    tokens[b, 0] = r.prompt[t + 1]  # still consuming prompt
+                    continue
+                tok = int(nxt[b])
+                r.generated.append(tok)
+                tokens[b, 0] = tok
+                if (len(r.generated) >= r.max_new_tokens or tok == r.eos_id):
+                    self._finish(r)
+                    # free the slot's blocks back to the pool (LIFO: the
+                    # next admission reuses this request's blocks first)
+                    for j in range(nb_slot):
+                        if block_tables[b, j] != 0:
+                            free.appendleft(int(block_tables[b, j]))
+                    block_tables[b] = 0
+                    positions[b] = 0
+                    tokens[b, 0] = 0
+                    slot_req[b] = None
+
+    # -- public ----------------------------------------------------------------
+
+    def run_until_drained(
+        self, max_waves: int = 1000, *, max_steps: Optional[int] = None
+    ) -> Dict[int, Request]:
+        t0 = time.time()
+        if self.scheduler == "wave":
+            self._drain_waves(max_waves)
+        else:
+            self._drain_continuous(max_steps)
+        self.wall_s += time.time() - t0
         return self.completed
+
+    def stats(self) -> Dict[str, Any]:
+        """Serving metrics in the perf-ledger schema (see
+        :func:`repro.perf.ledger.metrics_from_serving`)."""
+        lat = sorted(
+            r.latency_s for r in self.completed.values()
+            if r.latency_s is not None
+        )
+        new_tokens = sum(len(r.generated) for r in self.completed.values())
+        return {
+            "scheduler": self.scheduler,
+            "requests": len(self.completed),
+            "new_tokens": new_tokens,
+            "fused_steps": self.steps,
+            "busy_slot_steps": self.busy_slot_steps,
+            "slot_steps": self.total_slot_steps,
+            "slot_utilization": self.slot_utilization,
+            "wall_s": self.wall_s,
+            "tok_s": new_tokens / self.wall_s if self.wall_s > 0 else 0.0,
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+        }

@@ -20,6 +20,7 @@ DOCS = [
     "docs/ARCHITECTURE.md",
     "docs/TUNING.md",
     "docs/PERF.md",
+    "docs/SERVING.md",
 ]
 
 _BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
@@ -60,3 +61,4 @@ def test_readme_links_docs():
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/TUNING.md" in readme
     assert "docs/PERF.md" in readme
+    assert "docs/SERVING.md" in readme

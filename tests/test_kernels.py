@@ -182,6 +182,78 @@ def test_flash_decode_issue_model():
     assert c["r_issue"] > 2.0
 
 
+def _paged_setup(B, KV, D, bs, nb, seed=0):
+    """Random pool + shuffled non-contiguous block tables (block 0 = null)."""
+    n_blocks = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k_pool = jax.random.normal(ks[0], (n_blocks, bs, KV, D), jnp.float32)
+    v_pool = jax.random.normal(ks[1], (n_blocks, bs, KV, D), jnp.float32)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, n_blocks))
+    bt = jnp.asarray(perm[: B * nb].reshape(B, nb).astype(np.int32))
+    return k_pool, v_pool, bt, ks[2]
+
+
+@pytest.mark.parametrize("B,KV,G,D,bs,nb", [
+    (1, 1, 1, 16, 8, 4),
+    (3, 2, 2, 16, 4, 6),
+    (2, 4, 2, 32, 16, 2),
+])
+def test_flash_decode_paged_matches_ref(B, KV, G, D, bs, nb):
+    k_pool, v_pool, bt, kq = _paged_setup(B, KV, D, bs, nb)
+    q = jax.random.normal(kq, (B, KV, G, D), jnp.float32)
+    valid = jax.random.randint(jax.random.PRNGKey(7), (B,), 1, nb * bs + 1)
+    out = fdk.flash_decode_paged(q, k_pool, v_pool, bt, valid)
+    ref = fdr.decode_paged_ref(q, k_pool, v_pool, bt, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_decode_paged_matches_contiguous():
+    """A paged cache with an identity block table must reproduce the
+    contiguous kernel bit-for-bit: paging changes placement, not math."""
+    B, KV, G, D, bs, nb = 2, 2, 2, 16, 8, 4
+    S = nb * bs
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (B, KV, G, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32)
+    valid = jnp.asarray([13, 27], jnp.int32)
+    # lay each sequence's blocks out contiguously after the null block
+    k_pool = jnp.concatenate(
+        [jnp.zeros((1, bs, KV, D), jnp.float32),
+         k.reshape(B * nb, bs, KV, D)])
+    v_pool = jnp.concatenate(
+        [jnp.zeros((1, bs, KV, D), jnp.float32),
+         v.reshape(B * nb, bs, KV, D)])
+    bt = jnp.arange(1, 1 + B * nb, dtype=jnp.int32).reshape(B, nb)
+    paged = fdk.flash_decode_paged(q, k_pool, v_pool, bt, valid)
+    dense = fdk.flash_decode(q, k, v, valid, block_s=bs)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_decode_paged_stale_blocks_are_inert():
+    """Garbage in recycled / never-allocated blocks past valid_len cannot
+    leak into the output — per-slot length predication in the kernel."""
+    B, KV, G, D, bs, nb = 2, 2, 2, 16, 4, 4
+    k_pool, v_pool, bt, kq = _paged_setup(B, KV, D, bs, nb, seed=5)
+    q = jax.random.normal(kq, (B, KV, G, D), jnp.float32)
+    valid = jnp.asarray([6, 11], jnp.int32)
+    out1 = fdk.flash_decode_paged(q, k_pool, v_pool, bt, valid)
+    # poison every pool row belonging to a logical position >= valid
+    kp, vp = np.asarray(k_pool).copy(), np.asarray(v_pool).copy()
+    for b in range(B):
+        for j in range(nb):
+            for o in range(bs):
+                if j * bs + o >= int(valid[b]):
+                    kp[int(bt[b, j]), o] = 99.0
+                    vp[int(bt[b, j]), o] = -99.0
+    out2 = fdk.flash_decode_paged(
+        q, jnp.asarray(kp), jnp.asarray(vp), bt, valid)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # QC RX gate
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from repro.perf import (
     compare_runs,
     gate_run,
     metrics_from_analysis,
+    metrics_from_serving,
     metrics_from_summary,
     metrics_from_tuning,
     resolve_baseline,
@@ -95,6 +96,60 @@ def test_metrics_from_all_three_sources(tmp_path):
     for name in ("flops", "hbm_bytes", "gather_bytes", "r_ins",
                  "vectorizable_fraction"):
         assert name in m
+
+
+def _serve_report(scheduler="continuous", slot_utilization=0.9,
+                  fused_steps=48, tok_s=50.0, p95=0.8):
+    return {
+        "kind": "serve_report",
+        "arch": "gpt2-124m",
+        "scheduler": scheduler,
+        "stats": {
+            "scheduler": scheduler,
+            "requests": 6, "new_tokens": 31, "fused_steps": fused_steps,
+            "busy_slot_steps": 86, "slot_steps": fused_steps * 2,
+            "slot_utilization": slot_utilization, "wall_s": 0.62,
+            "tok_s": tok_s, "p50_latency_s": 0.3, "p95_latency_s": p95,
+        },
+    }
+
+
+def test_metrics_from_serving_keyed_by_arch_and_scheduler(tmp_path):
+    ledger = Ledger(str(tmp_path))
+    run = ledger.record_sources(serving=_serve_report(), env=ENV)
+    assert set(run.metrics) == {"serve/gpt2-124m@continuous"}
+    assert run.meta["sources"] == ["serving"]
+    m = run.metrics["serve/gpt2-124m@continuous"]
+    # everything launch.serve's stats() emits lands in the ledger row
+    for name in ("tok_s", "p50_latency_s", "p95_latency_s",
+                 "slot_utilization", "fused_steps", "requests", "new_tokens"):
+        assert name in m, name
+    assert m["slot_utilization"] == pytest.approx(0.9)
+    # wave and continuous runs are distinct trajectory keys
+    assert set(metrics_from_serving(_serve_report("wave"))) == {
+        "serve/gpt2-124m@wave"
+    }
+
+
+def test_serving_regressions_gate(tmp_path):
+    """Slot utilization dropping or fused steps growing regresses the
+    serve path; wall-noisy tok/s movement inside tolerance does not."""
+    ledger = Ledger(str(tmp_path))
+    base = ledger.record_sources(serving=_serve_report(), env=ENV)
+    worse = ledger.record_sources(
+        serving=_serve_report(slot_utilization=0.7, fused_steps=60,
+                              tok_s=47.0), env=ENV,
+    )
+    cmp_ = compare_runs(base, worse)
+    regressed = {(r.key, r.metric) for r in cmp_.regressions}
+    assert ("serve/gpt2-124m@continuous", "slot_utilization") in regressed
+    assert ("serve/gpt2-124m@continuous", "fused_steps") in regressed
+    assert ("serve/gpt2-124m@continuous", "tok_s") not in regressed  # -6%, noisy
+    result = gate_run(worse, ledger, policy="latest")
+    assert not result.ok and result.exit_code == 1
+    # a same-metrics re-record passes
+    again = ledger.record_sources(serving=_serve_report(), env=ENV)
+    assert gate_run(again, ledger, policy="pinned:" + base.run_id[:10]).ok
 
 
 def test_summary_env_stamp_is_honored(tmp_path):

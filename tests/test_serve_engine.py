@@ -1,12 +1,22 @@
-"""Batched serving engine: lockstep waves must match single-request greedy
-decoding exactly, and the queue must drain under mixed workloads."""
+"""Serving engine contract.
+
+* Both schedulers must match single-request greedy decoding token-for-token.
+* On ragged prompts with early EOS the continuous scheduler must produce
+  IDENTICAL per-request tokens to ``scheduler="wave"`` while spending
+  strictly fewer fused decode steps at strictly higher slot utilization
+  (the Eq. 1 predication win at the serving layer).
+* Finished slots refill mid-flight and their paged-cache blocks are
+  recycled across requests.
+* Oversized requests fail typed at submit(); the drain-loop cap is exact.
+"""
 
 import jax
 import numpy as np
 import pytest
 
 import repro.configs as configs
-from repro.serve.engine import Request, ServeEngine
+from repro.core import metrics as core_metrics
+from repro.serve.engine import Request, RequestTooLong, ServeEngine
 from repro.train import steps as steps_mod
 
 
@@ -24,14 +34,16 @@ def _greedy_single(cfg, params, prompt, max_new):
     return engine.run_until_drained()[0].generated
 
 
-def test_batched_matches_single(setup):
+@pytest.mark.parametrize("scheduler", ["continuous", "wave"])
+def test_batched_matches_single(setup, scheduler):
     cfg, params = setup
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(3, 12)))
                .astype(np.int32) for _ in range(3)]
     singles = [_greedy_single(cfg, params, p, 6) for p in prompts]
 
-    engine = ServeEngine(cfg, params, max_batch=3, max_len=96)
+    engine = ServeEngine(cfg, params, max_batch=3, max_len=96,
+                         scheduler=scheduler)
     for uid, p in enumerate(prompts):
         engine.submit(Request(uid=uid, prompt=p, max_new_tokens=6))
     done = engine.run_until_drained()
@@ -44,7 +56,8 @@ def test_batched_matches_single(setup):
 def test_queue_drains_multiple_waves(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)
-    engine = ServeEngine(cfg, params, max_batch=2, max_len=64)
+    engine = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                         scheduler="wave")
     for uid in range(5):
         engine.submit(Request(
             uid=uid,
@@ -66,3 +79,165 @@ def test_eos_stops_generation(setup):
     engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=first))
     done = engine.run_until_drained()
     assert done[0].generated == [first]
+
+
+# ---------------------------------------------------------------------------
+# continuous vs wave: the golden-equivalence + predication-win contract
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_wave_with_fewer_steps(setup):
+    """Ragged prompts (4-17 tokens) + one early-EOS request: identical
+    per-request tokens, strictly fewer fused steps, strictly higher slot
+    utilization under the continuous scheduler."""
+    cfg, params = setup
+    # seed 9 -> prompt lengths [9, 15, 16, 7, 5, 11]: FIFO waves of 2 pair
+    # short with long, so lockstep idles finished slots badly
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 17)))
+               .astype(np.int32) for _ in range(6)]
+    # request 0 hits EOS on its very first generated token
+    eos0 = _greedy_single(cfg, params, prompts[0], 1)[0]
+
+    engines = {}
+    for sched in ("wave", "continuous"):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=64,
+                          scheduler=sched, block_size=8)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=6,
+                               eos_id=eos0 if uid == 0 else -1))
+        eng.run_until_drained()
+        engines[sched] = eng
+
+    wave, cont = engines["wave"], engines["continuous"]
+    assert len(cont.completed) == len(wave.completed) == 6
+    for uid in range(6):
+        assert cont.completed[uid].generated == wave.completed[uid].generated, (
+            f"req {uid}: continuous {cont.completed[uid].generated} "
+            f"!= wave {wave.completed[uid].generated}"
+        )
+    assert cont.completed[0].generated == [eos0]  # the early-EOS request
+    assert cont.steps < wave.steps, (cont.steps, wave.steps)
+    assert cont.slot_utilization > wave.slot_utilization, (
+        cont.slot_utilization, wave.slot_utilization
+    )
+    # the stats() schema the perf ledger ingests
+    stats = cont.stats()
+    assert stats["fused_steps"] == cont.steps
+    assert stats["requests"] == 6
+    assert 0.0 < stats["slot_utilization"] <= 1.0
+    assert stats["p95_latency_s"] >= stats["p50_latency_s"] > 0.0
+
+
+def test_early_eos_refills_slot_mid_flight(setup):
+    """A slot freed by early EOS admits the next queued request while the
+    other slot is still decoding — no wave barrier."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 12, 6)]
+    eos0 = _greedy_single(cfg, params, prompts[0], 1)[0]
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                      scheduler="continuous", block_size=8)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=8, eos_id=eos0))
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=8))
+    eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=8))
+    done = eng.run_until_drained()
+    assert len(done) == 3 and done[0].generated == [eos0]
+    # uid=2 was admitted into uid=0's freed slot before uid=1 finished
+    assert done[2].started_s < done[1].finished_s
+    # ... and recycled at least one of uid=0's physical cache blocks
+    assert set(eng.block_history[2]) & set(eng.block_history[0])
+
+
+def test_paged_blocks_reused_across_requests(setup):
+    """Sequential requests through one slot recycle pool blocks."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32,
+                      scheduler="continuous", block_size=8)
+    for uid in range(3):
+        eng.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab, size=10).astype(np.int32),
+            max_new_tokens=4,
+        ))
+    eng.run_until_drained()
+    # each request spans ceil((10+4-1)/8) = 2 blocks from a 4-block pool;
+    # LIFO freeing means every later request reuses its predecessor's blocks
+    assert all(len(blocks) == 2 for blocks in eng.block_history.values())
+    assert set(eng.block_history[1]) == set(eng.block_history[0])
+    assert set(eng.block_history[2]) == set(eng.block_history[0])
+
+
+# ---------------------------------------------------------------------------
+# slot accounting + typed failure modes
+# ---------------------------------------------------------------------------
+
+
+def test_slot_utilization_pinned_trace():
+    """Hand-computed trace: 2 slots, prompts of 3 and 5 tokens, max_new=2,
+    lockstep wave.  Horizon = max(5, 7) = 7 -> 6 fused steps; slot 0 is
+    busy for its own 3+2-1 = 4 steps, slot 1 for all 6; utilization is
+    (4 + 6) / (6 * 2) = 10/12."""
+    assert core_metrics.slot_utilization(10, 6, 2) == pytest.approx(10 / 12)
+    # degenerate inputs clamp instead of exploding
+    assert core_metrics.slot_utilization(0, 0, 2) == 0.0
+    assert core_metrics.slot_utilization(99, 2, 2) == 1.0
+
+
+def test_wave_slot_accounting_matches_pinned_trace(setup):
+    """The wave engine reproduces the hand trace above exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32, scheduler="wave")
+    for uid, plen in enumerate((3, 5)):
+        eng.submit(Request(
+            uid=uid,
+            prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+            max_new_tokens=2,
+        ))
+    eng.run_until_drained()
+    assert eng.steps == 6
+    assert eng.busy_slot_steps == 10
+    assert eng.slot_utilization == pytest.approx(10 / 12)
+
+
+def test_request_too_long_rejected_at_submit(setup):
+    """An oversized request raises typed at submit() and cannot poison the
+    queue (the old in-wave assert crashed whole waves)."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=32)
+    with pytest.raises(RequestTooLong):
+        eng.submit(Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                           max_new_tokens=20))
+    assert not eng.queue  # nothing enqueued
+    eng.submit(Request(uid=1, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert list(done) == [1] and len(done[1].generated) == 3
+
+
+def test_max_waves_cap_is_exact(setup):
+    """max_waves admits exactly max_waves waves (the old check ran one
+    extra wave before raising)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+
+    def submit3(eng):
+        for uid in range(3):
+            eng.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, size=3).astype(np.int32),
+                max_new_tokens=2,
+            ))
+
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32, scheduler="wave")
+    submit3(eng)
+    with pytest.raises(RuntimeError):
+        eng.run_until_drained(max_waves=2)
+    assert len(eng.completed) == 2  # exactly two waves ran
+
+    eng = ServeEngine(cfg, params, max_batch=1, max_len=32, scheduler="wave")
+    submit3(eng)
+    assert len(eng.run_until_drained(max_waves=3)) == 3

@@ -21,11 +21,12 @@ import jax
 import numpy as np
 
 import repro.configs as configs
-from repro.serve.engine import SCHEDULERS, Request, ServeEngine
+from repro.serve.engine import SCHEDULERS, Request, RequestTooLong, ServeEngine
 from repro.train import steps as steps_mod
 
 
-def build_report(args: argparse.Namespace, engine: ServeEngine) -> dict:
+def build_report(args: argparse.Namespace, engine: ServeEngine,
+                 rejections: list = ()) -> dict:
     """Machine-readable serve report (the ledger's serving source)."""
     return {
         "kind": "serve_report",
@@ -34,6 +35,8 @@ def build_report(args: argparse.Namespace, engine: ServeEngine) -> dict:
         "max_batch": engine.max_batch,
         "max_len": engine.max_len,
         "block_size": engine.block_size,
+        "rejected": len(rejections),
+        "rejections": [{"uid": u, "reason": reason} for u, reason in rejections],
         "stats": engine.stats(),
         "requests": [
             {
@@ -75,13 +78,19 @@ def main(argv=None) -> int:
                          block_size=args.block_size)
 
     rng = np.random.default_rng(args.seed)
+    rejections: list = []
     for uid in range(args.requests):
         plen = int(rng.integers(4, 17))
-        engine.submit(Request(
-            uid=uid,
-            prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
-            max_new_tokens=args.max_new,
-        ))
+        try:
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+                max_new_tokens=args.max_new,
+            ))
+        except RequestTooLong as e:
+            # an oversized submission is a counted rejection, not a crash:
+            # the remaining requests still get served and reported
+            rejections.append((uid, str(e)))
     done = engine.run_until_drained()
     stats = engine.stats()
     print(f"[{args.scheduler}] served {stats['requests']} requests, "
@@ -91,13 +100,17 @@ def main(argv=None) -> int:
           f"({stats['busy_slot_steps']}/{stats['slot_steps']} slot-steps), "
           f"latency p50 {stats['p50_latency_s']:.3f}s "
           f"p95 {stats['p95_latency_s']:.3f}s")
+    if rejections:
+        print(f"  rejected {len(rejections)} oversized request(s) at submit:")
+        for uid, reason in rejections:
+            print(f"    req {uid}: {reason}")
     for uid in sorted(done):
         r = done[uid]
         lat = f"{r.latency_s:.3f}s" if r.latency_s is not None else "n/a"
         print(f"  req {uid}: prompt[{len(r.prompt)}] latency {lat} "
               f"-> {r.generated}")
 
-    report = build_report(args, engine)
+    report = build_report(args, engine, rejections)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1)

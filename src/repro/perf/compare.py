@@ -61,10 +61,20 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("tok_s", "lower", 0.15, noisy=True),
         MetricSpec("p50_latency_s", "higher", 0.15, noisy=True),
         MetricSpec("p95_latency_s", "higher", 0.20, noisy=True),
+        MetricSpec("ttft_p50_s", "higher", 0.15, noisy=True),
+        MetricSpec("ttft_p95_s", "higher", 0.20, noisy=True),
         MetricSpec("slot_utilization", "lower", 0.02),
         MetricSpec("fused_steps", "higher", 0.0),
         MetricSpec("requests", "lower", 0.0),
         MetricSpec("new_tokens", "lower", 0.0),
+        # scenario-cell counters: given the seeded trace these are exact,
+        # so ANY movement regresses — a new rejection, preemption, or
+        # restart under the same spec is a behavior change, not noise.
+        # (golden_ok / slo_ok are booleans: _judge regresses True -> False
+        # before any spec lookup.)
+        MetricSpec("rejected", "higher", 0.0),
+        MetricSpec("preemptions", "higher", 0.0),
+        MetricSpec("restarts", "higher", 0.0),
     )
 }
 
@@ -114,6 +124,9 @@ class Regression:
     def to_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["severity"] = self.severity
+        for k in ("rel_delta", "severity"):
+            if isinstance(d[k], float) and not math.isfinite(d[k]):
+                d[k] = None  # counter sprang from a zero baseline; keep JSON strict
         return d
 
 
@@ -169,8 +182,14 @@ def _judge(
     if before == 0:
         # no relative judgement exists against a zero baseline (a rounded
         # 0.000s wall time would read epsilon-nonzero as an astronomical
-        # regression); report the movement, never gate on it
+        # regression); report the movement, never gate on it — EXCEPT for
+        # exact counters (rel_tol 0), where zero is a real value, not a
+        # rounding artifact: the first rejection/preemption/restart under
+        # an unchanged spec is a behavior change and must gate
         rel = 0.0 if after == 0 else math.copysign(float("inf"), after)
+        if spec is not None and spec.rel_tol == 0 and after != 0:
+            worse = rel > 0 if spec.worse == "higher" else rel < 0
+            return rel, 0.0, worse, not worse
         return rel, 0.0, False, False
     rel = (after - before) / abs(before)
     if spec is None:

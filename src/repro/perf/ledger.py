@@ -288,8 +288,25 @@ def _metrics_from_analysis_dict(d: Mapping[str, Any]) -> Dict[str, Any]:
 _SERVING_METRICS = (
     "requests", "new_tokens", "fused_steps", "busy_slot_steps",
     "slot_steps", "slot_utilization", "tok_s",
-    "p50_latency_s", "p95_latency_s",
+    "p50_latency_s", "p95_latency_s", "ttft_p50_s", "ttft_p95_s",
+    "preemptions", "rejected", "restarts",
 )
+
+#: _SERVING_METRICS names that are exact counters (held tight by the gate);
+#: the rest are wall-derived floats with noisy tolerances.
+_SERVING_INT_METRICS = frozenset((
+    "requests", "new_tokens", "fused_steps", "busy_slot_steps",
+    "slot_steps", "preemptions", "rejected", "restarts",
+))
+
+
+def _serving_row(stats: Mapping[str, Any]) -> Dict[str, Any]:
+    row: Dict[str, Any] = {}
+    for name in _SERVING_METRICS:
+        if stats.get(name) is not None:
+            row[name] = (int(stats[name]) if name in _SERVING_INT_METRICS
+                         else float(stats[name]))
+    return row
 
 
 def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]:
@@ -300,13 +317,34 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
     stats = report.get("stats") or {}
     key = (f"serve/{report.get('arch', '?')}"
            f"@{report.get('scheduler', stats.get('scheduler', '?'))}")
-    row: Dict[str, Any] = {}
-    for name in _SERVING_METRICS:
-        if stats.get(name) is not None:
-            row[name] = (int(stats[name]) if name in (
-                "requests", "new_tokens", "fused_steps", "busy_slot_steps",
-                "slot_steps") else float(stats[name]))
+    row = _serving_row(stats)
+    # submit-time rejections live on the report, not in engine stats: the
+    # engine never saw those requests (launch.serve counts them)
+    if "rejected" not in row and report.get("rejected") is not None:
+        row["rejected"] = int(report["rejected"])
     return {key: row} if row else {}
+
+
+def metrics_from_scenario(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """One metric row per scenario cell from a ``scenario_cell`` payload
+    (:meth:`repro.scenarios.runner.CellResult.report`), keyed by the cell's
+    ``scenario/<cell_id>`` ledger key so ``repro.perf gate`` compares each
+    cell only against its own trajectory (the gate's latest-comparable
+    fallback matches on shared metric keys).  ``golden_ok`` / ``slo_ok``
+    ride along as booleans: the gate regresses any True -> False flip."""
+    stats = report.get("stats") or {}
+    key = str(report.get("ledger_key")
+              or f"scenario/{report.get('cell_id', '?')}")
+    row = _serving_row(stats)
+    if not row:
+        return {}
+    row["rejected"] = int(len(report.get("rejected") or ())
+                          if "rejected" not in row else row["rejected"])
+    row["restarts"] = int(report.get("restarts", row.get("restarts", 0)))
+    if report.get("golden_checked"):
+        row["golden_ok"] = bool(report.get("golden_ok"))
+    row["slo_ok"] = not report.get("slo_failures")
+    return {key: row}
 
 
 def metrics_from_analysis(

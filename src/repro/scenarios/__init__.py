@@ -1,0 +1,50 @@
+"""Scenario-matrix traffic harness: declarative traffic x fault matrices
+over the serve engine, with golden-twin equivalence and per-cell SLO
+gating through the perf ledger.
+
+See :mod:`repro.scenarios.matrix` (axes -> seeded cells),
+:mod:`repro.scenarios.traffic` (cell -> reproducible request trace),
+:mod:`repro.scenarios.faults` (fault plans), and
+:mod:`repro.scenarios.runner` (execution, twin diffing, recording).
+CLI: ``python -m repro.scenarios {list,run,gate}``.
+"""
+
+from repro.scenarios.faults import (
+    PLANS,
+    FaultPlan,
+    SimulatedDeviceLoss,
+    get_plan,
+)
+from repro.scenarios.matrix import (
+    MATRICES,
+    SERVE_ARCHS,
+    ArrivalSpec,
+    EosSpec,
+    MatrixSpec,
+    PromptSpec,
+    Scenario,
+    SLOSpec,
+    cell_seed,
+    full_matrix,
+    load_matrix,
+    smoke_matrix,
+)
+from repro.scenarios.runner import (
+    CellResult,
+    TrafficFeeder,
+    format_matrix_markdown,
+    record_cell,
+    run_cell,
+    run_matrix,
+)
+from repro.scenarios.traffic import RequestSpec, sample_trace
+
+__all__ = [
+    "ArrivalSpec", "PromptSpec", "EosSpec", "SLOSpec", "Scenario",
+    "MatrixSpec", "MATRICES", "SERVE_ARCHS", "cell_seed", "smoke_matrix",
+    "full_matrix", "load_matrix",
+    "RequestSpec", "sample_trace",
+    "FaultPlan", "PLANS", "get_plan", "SimulatedDeviceLoss",
+    "CellResult", "TrafficFeeder", "run_cell", "run_matrix", "record_cell",
+    "format_matrix_markdown",
+]

@@ -1,0 +1,358 @@
+"""Declarative scenario matrices: axes -> cartesian, seeded `Scenario` cells.
+
+A :class:`MatrixSpec` names one value-list per traffic axis — arrival
+process x prompt-length distribution x EOS-probability x scheduler x
+architecture x fault plan — and :meth:`MatrixSpec.cells` expands the
+cartesian product into :class:`Scenario` cells (skipping combinations a
+fault plan declares invalid, e.g. slot preemption under the lockstep wave
+scheduler, which has no slots to preempt).
+
+Every cell carries a **derived seed**: SHA-256 over the spec seed and the
+cell's *traffic* key.  Two properties follow by construction:
+
+* same spec => same sampled traffic, process- and machine-independent
+  (the acceptance bar: a scenario is a reproducible experiment, not a
+  lucky workload);
+* the traffic key excludes the scheduler and the fault axis, so a faulted
+  cell, its fault-free golden twin, and the same traffic under the other
+  scheduler all sample IDENTICAL requests — the paper's methodology of
+  varying one axis while pinning the rest (Sec. 5's per-app sweeps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+from repro.serve.engine import SCHEDULERS
+
+#: Architectures the serve engine is golden-verified on (PR 5).
+SERVE_ARCHS = (
+    "gpt2-124m", "qwen3-1.7b", "mamba2-370m", "deepseek-v2-lite-16b",
+    "deepseek-moe-16b", "jamba-1.5-large-398b",
+)
+
+
+# ---------------------------------------------------------------------------
+# Axis value specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """When requests arrive, measured in fused decode steps (the engine's
+    clock): ``poisson`` (exponential interarrivals at ``rate`` requests per
+    step), ``bursty`` (``burst`` requests every ``gap`` steps), or
+    ``replay`` (explicit step offsets, cycled over the request count)."""
+
+    kind: str = "poisson"
+    rate: float = 0.5
+    burst: int = 4
+    gap: int = 24
+    steps: Sequence[int] = ()
+
+    def __post_init__(self):
+        if self.kind not in ("poisson", "bursty", "replay"):
+            raise ValueError(f"unknown arrival kind {self.kind!r}")
+        if self.kind == "poisson" and self.rate <= 0:
+            raise ValueError("poisson arrival needs rate > 0")
+        if self.kind == "replay" and not self.steps:
+            raise ValueError("replay arrival needs explicit steps")
+        object.__setattr__(self, "steps", tuple(int(s) for s in self.steps))
+
+    @property
+    def slug(self) -> str:
+        if self.kind == "poisson":
+            return f"poisson{self.rate:g}"
+        if self.kind == "bursty":
+            return f"burst{self.burst}x{self.gap}"
+        return f"replay{len(self.steps)}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PromptSpec:
+    """Prompt-length distribution: ``uniform`` on [lo, hi], ``fixed`` at
+    ``n``, or ``bimodal`` (``long`` tokens with probability ``p_long``,
+    else ``short`` — the ragged mix lockstep scheduling pads worst)."""
+
+    kind: str = "uniform"
+    lo: int = 4
+    hi: int = 16
+    n: int = 8
+    short: int = 4
+    long: int = 24
+    p_long: float = 0.25
+
+    def __post_init__(self):
+        if self.kind not in ("uniform", "fixed", "bimodal"):
+            raise ValueError(f"unknown prompt kind {self.kind!r}")
+        if self.kind == "uniform" and not 1 <= self.lo <= self.hi:
+            raise ValueError(f"bad uniform bounds [{self.lo}, {self.hi}]")
+
+    @property
+    def slug(self) -> str:
+        if self.kind == "uniform":
+            return f"u{self.lo}-{self.hi}"
+        if self.kind == "fixed":
+            return f"fix{self.n}"
+        return f"bi{self.short}-{self.long}p{self.p_long:g}"
+
+
+@dataclasses.dataclass(frozen=True)
+class EosSpec:
+    """Per-token stop probability.  Real EOS is a model-emitted token; for
+    a seeded traffic model we sample the *consequence* instead: each
+    request's token budget is capped at Geometric(``p_early``) (so
+    completions go ragged exactly as stochastic EOS makes them), which
+    keeps the trace deterministic under any parameter init."""
+
+    p_early: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_early < 1.0:
+            raise ValueError(f"p_early must be in [0, 1), got {self.p_early}")
+
+    @property
+    def slug(self) -> str:
+        return f"eos{self.p_early:g}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Per-cell service-level floors/ceilings checked by the runner.
+
+    Defaults are deliberately loose enough for shared CI runners — the
+    machinery (violation -> failed cell -> non-zero gate exit) is the
+    contract; operators tighten the numbers per deployment."""
+
+    min_tok_s: float = 0.05
+    max_p95_latency_s: float = 120.0
+    max_ttft_p95_s: float = 120.0
+    min_slot_utilization: float = 0.05
+
+    def check(self, stats: Mapping[str, Any]) -> List[str]:
+        """Violation strings (empty = SLOs met)."""
+        out = []
+        checks = (
+            ("tok_s", self.min_tok_s, "floor", "tok/s"),
+            ("p95_latency_s", self.max_p95_latency_s, "ceiling", "p95 latency"),
+            ("ttft_p95_s", self.max_ttft_p95_s, "ceiling", "p95 TTFT"),
+            ("slot_utilization", self.min_slot_utilization, "floor",
+             "slot utilization"),
+        )
+        for name, bound, kind, label in checks:
+            val = stats.get(name)
+            if val is None:
+                out.append(f"{label}: metric {name!r} missing from stats")
+            elif kind == "floor" and float(val) < bound:
+                out.append(f"{label} {float(val):.4g} < floor {bound:g}")
+            elif kind == "ceiling" and float(val) > bound:
+                out.append(f"{label} {float(val):.4g} > ceiling {bound:g}")
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One fully-pinned cell of the matrix: every axis chosen, seed derived."""
+
+    arrival: ArrivalSpec
+    prompt: PromptSpec
+    eos: EosSpec
+    scheduler: str
+    arch: str
+    fault: str
+    requests: int
+    max_new: int
+    max_batch: int
+    max_len: int
+    block_size: int
+    seed: int  # derived: see cell_seed()
+    slo: SLOSpec = SLOSpec()
+
+    @property
+    def traffic_key(self) -> str:
+        """Axes the sampled traffic depends on.  Scheduler and fault are
+        EXCLUDED so twins and cross-scheduler cells share a trace."""
+        return "/".join((
+            self.arrival.slug, self.prompt.slug, self.eos.slug, self.arch,
+            f"n{self.requests}", f"new{self.max_new}",
+        ))
+
+    @property
+    def cell_id(self) -> str:
+        return "/".join((
+            self.arrival.slug, self.prompt.slug, self.eos.slug,
+            self.scheduler, self.arch, self.fault,
+        ))
+
+    @property
+    def ledger_key(self) -> str:
+        """Workload key of this cell's BenchRun row in the perf ledger."""
+        return f"scenario/{self.cell_id}"
+
+    def twin(self) -> "Scenario":
+        """The fault-free golden twin: same everything, fault='none'.
+        Shares the seed (fault is outside the traffic key), so both cells
+        sample byte-identical traffic."""
+        return dataclasses.replace(self, fault="none")
+
+
+def cell_seed(spec_seed: int, traffic_key: str) -> int:
+    """Deterministic 32-bit seed for one cell's traffic sampler."""
+    digest = hashlib.sha256(f"{spec_seed}|{traffic_key}".encode()).digest()
+    return int.from_bytes(digest[:4], "big")
+
+
+# ---------------------------------------------------------------------------
+# The matrix
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MatrixSpec:
+    """The declarative matrix: one value-list per axis + shared sizing."""
+
+    arrivals: List[ArrivalSpec] = dataclasses.field(
+        default_factory=lambda: [ArrivalSpec()])
+    prompts: List[PromptSpec] = dataclasses.field(
+        default_factory=lambda: [PromptSpec()])
+    eos: List[EosSpec] = dataclasses.field(
+        default_factory=lambda: [EosSpec()])
+    schedulers: List[str] = dataclasses.field(
+        default_factory=lambda: list(SCHEDULERS))
+    archs: List[str] = dataclasses.field(
+        default_factory=lambda: ["gpt2-124m"])
+    faults: List[str] = dataclasses.field(
+        default_factory=lambda: ["none"])
+    requests: int = 6
+    max_new: int = 8
+    max_batch: int = 2
+    max_len: int = 64
+    block_size: int = 8
+    seed: int = 0
+    slo: SLOSpec = dataclasses.field(default_factory=SLOSpec)
+
+    def cells(self) -> List[Scenario]:
+        """Cartesian expansion, invalid (fault x scheduler) combos skipped."""
+        from repro.scenarios.faults import get_plan  # cycle-free at call time
+
+        out: List[Scenario] = []
+        for arch in self.archs:
+            for sched in self.schedulers:
+                if sched not in SCHEDULERS:
+                    raise ValueError(f"unknown scheduler {sched!r}")
+                for arr in self.arrivals:
+                    for pr in self.prompts:
+                        for eo in self.eos:
+                            for fault in self.faults:
+                                cell = Scenario(
+                                    arrival=arr, prompt=pr, eos=eo,
+                                    scheduler=sched, arch=arch, fault=fault,
+                                    requests=self.requests,
+                                    max_new=self.max_new,
+                                    max_batch=self.max_batch,
+                                    max_len=self.max_len,
+                                    block_size=self.block_size,
+                                    seed=0, slo=self.slo,
+                                )
+                                if not get_plan(fault).applies_to(cell):
+                                    continue
+                                out.append(dataclasses.replace(
+                                    cell,
+                                    seed=cell_seed(self.seed, cell.traffic_key),
+                                ))
+        return out
+
+    # -- JSON round-trip (spec files for the CLI) ---------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for arr in d["arrivals"]:
+            arr["steps"] = list(arr["steps"])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MatrixSpec":
+        kw: Dict[str, Any] = {}
+        for f in dataclasses.fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            if f.name == "arrivals":
+                v = [ArrivalSpec(**a) for a in v]
+            elif f.name == "prompts":
+                v = [PromptSpec(**a) for a in v]
+            elif f.name == "eos":
+                v = [EosSpec(**a) for a in v]
+            elif f.name == "slo":
+                v = SLOSpec(**v)
+            kw[f.name] = v
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, path: str) -> "MatrixSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+def smoke_matrix() -> MatrixSpec:
+    """The CI matrix: 2 archs x both schedulers x every fault plan, over
+    Poisson arrivals on ragged uniform prompts with stochastic early stop."""
+    return MatrixSpec(
+        arrivals=[ArrivalSpec(kind="poisson", rate=0.5)],
+        prompts=[PromptSpec(kind="uniform", lo=4, hi=12)],
+        eos=[EosSpec(p_early=0.1)],
+        schedulers=list(SCHEDULERS),
+        archs=["gpt2-124m", "qwen3-1.7b"],
+        faults=["none", "preempt", "device-loss", "malformed"],
+        requests=6,
+        max_new=8,
+        max_batch=2,
+        max_len=64,
+        block_size=8,
+    )
+
+
+def full_matrix() -> MatrixSpec:
+    """The wide matrix: every arrival/length/EOS shape, all six serve
+    architectures, every fault plan.  Expansion is cheap; running it is an
+    operator decision (``--only`` filters, ``--jobs`` fans out)."""
+    return MatrixSpec(
+        arrivals=[
+            ArrivalSpec(kind="poisson", rate=0.5),
+            ArrivalSpec(kind="bursty", burst=4, gap=24),
+            ArrivalSpec(kind="replay", steps=(0, 0, 1, 5, 9, 30)),
+        ],
+        prompts=[
+            PromptSpec(kind="uniform", lo=4, hi=16),
+            PromptSpec(kind="bimodal", short=4, long=24, p_long=0.25),
+        ],
+        eos=[EosSpec(p_early=0.0), EosSpec(p_early=0.15)],
+        schedulers=list(SCHEDULERS),
+        archs=list(SERVE_ARCHS),
+        faults=["none", "preempt", "device-loss", "malformed"],
+        requests=8,
+        max_new=8,
+        max_batch=2,
+        max_len=64,
+        block_size=8,
+    )
+
+
+MATRICES = {"smoke": smoke_matrix, "full": full_matrix}
+
+
+def load_matrix(name_or_path: Optional[str]) -> MatrixSpec:
+    """Resolve a named matrix ('smoke', 'full') or a JSON spec file."""
+    if not name_or_path:
+        return smoke_matrix()
+    if name_or_path in MATRICES:
+        return MATRICES[name_or_path]()
+    return MatrixSpec.from_json(name_or_path)

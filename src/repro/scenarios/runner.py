@@ -1,0 +1,427 @@
+"""Cell execution: drive ServeEngine per scenario, diff golden twins,
+check SLOs, record one BenchRun per cell into the perf ledger.
+
+Execution paths:
+
+* **engine path** (``none``/``preempt``/``malformed``): one
+  :class:`~repro.serve.engine.ServeEngine` per cell, traffic delivered by
+  a :class:`TrafficFeeder` step hook honoring sampled arrival steps, the
+  fault plan's hook (if any) riding alongside.
+* **resilient path** (``device-loss``): the trace is partitioned into
+  chunks and served under
+  :class:`~repro.distributed.fault_tolerance.ResilientLoop` — every chunk
+  commits its served tokens into a fixed-shape state checkpointed through
+  :class:`~repro.checkpoint.CheckpointStore`; the injected
+  :class:`~repro.scenarios.faults.SimulatedDeviceLoss` kills the drain
+  mid-chunk, the loop restores the newest committed checkpoint, and the
+  replayed chunk must (and does) regenerate identical tokens.
+
+Every faulted cell is diffed against its fault-free **golden twin** (same
+seed, same traffic — the fault axis is excluded from seed derivation):
+served token streams must match uid-for-uid, token-for-token.  A twin
+mismatch, an SLO violation, or a cell error all fail the cell; the gate
+CLI turns failed cells into a non-zero exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import shutil
+import tempfile
+import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.checkpoint import CheckpointStore
+from repro.distributed.fault_tolerance import FaultToleranceConfig, ResilientLoop
+from repro.scenarios import faults as faults_mod
+from repro.scenarios.matrix import MatrixSpec, Scenario
+from repro.scenarios.traffic import RequestSpec, sample_trace
+from repro.serve.engine import Request, RequestTooLong, ServeEngine
+from repro.train import steps as steps_mod
+
+# one smoke model per architecture, shared across every cell (and thread)
+_PARAMS_LOCK = threading.Lock()
+_PARAMS: Dict[str, Tuple[Any, Any]] = {}
+
+
+def _params_for(arch: str) -> Tuple[Any, Any]:
+    with _PARAMS_LOCK:
+        if arch not in _PARAMS:
+            cfg = configs.get_smoke_config(arch)
+            _PARAMS[arch] = (cfg, steps_mod.init_model(
+                jax.random.PRNGKey(0), cfg))
+        return _PARAMS[arch]
+
+
+class TrafficFeeder:
+    """Step hook delivering the sampled trace on the engine's step clock.
+
+    ``clock = engine.steps + offset``: when the engine goes fully idle
+    before the next arrival, the feeder fast-forwards ``offset`` to it
+    (compressing dead air instead of spinning), which keeps arrival
+    *patterns* — bursts, gaps, overlaps — while staying deterministic.
+    Malformed submissions are caught typed and counted, never raised.
+    """
+
+    def __init__(self, trace: List[RequestSpec]):
+        self.pending = deque(sorted(trace, key=lambda r: (r.arrive_step, r.uid)))
+        self.offset = 0
+        self.submitted = 0
+        self.rejected: List[Tuple[int, str]] = []
+
+    def _deliver(self, engine: ServeEngine) -> int:
+        n = 0
+        while (self.pending
+               and self.pending[0].arrive_step <= engine.steps + self.offset):
+            spec = self.pending.popleft()
+            try:
+                engine.submit(Request(
+                    uid=spec.uid, prompt=np.array(spec.prompt, np.int32),
+                    max_new_tokens=spec.max_new_tokens, eos_id=spec.eos_id,
+                ))
+                self.submitted += 1
+            except (RequestTooLong, ValueError) as e:
+                self.rejected.append((spec.uid, str(e)))
+            n += 1
+        return n
+
+    def __call__(self, engine: ServeEngine, busy: bool) -> bool:
+        delivered = self._deliver(engine)
+        if (self.pending and not delivered and not busy and not engine.queue):
+            # fully idle with future arrivals: jump the clock to the next one
+            self.offset = max(
+                self.offset, self.pending[0].arrive_step - engine.steps
+            )
+            self._deliver(engine)
+        return bool(self.pending)
+
+
+# ---------------------------------------------------------------------------
+# Execution paths
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Execution:
+    """Raw outcome of serving one trace (either path)."""
+
+    stats: Dict[str, Any]
+    tokens: Dict[int, List[int]]
+    rejected: List[Tuple[int, str]]
+    restarts: int = 0
+
+
+def _execute_engine(cell: Scenario, cfg, params,
+                    trace: List[RequestSpec],
+                    fault_hook=None) -> _Execution:
+    engine = ServeEngine(
+        cfg, params, max_batch=cell.max_batch, max_len=cell.max_len,
+        scheduler=cell.scheduler, block_size=cell.block_size,
+    )
+    feeder = TrafficFeeder(trace)
+    engine.add_step_hook(feeder)
+    if fault_hook is not None:
+        engine.add_step_hook(fault_hook)
+    engine.run_until_drained()
+    stats = engine.stats()
+    stats["rejected"] = len(feeder.rejected)
+    stats["restarts"] = 0
+    return _Execution(
+        stats=stats,
+        tokens={uid: list(r.generated) for uid, r in engine.completed.items()},
+        rejected=feeder.rejected,
+    )
+
+
+def _percentile(vals: List[float], q: float) -> float:
+    return float(np.percentile(vals, q)) if vals else 0.0
+
+
+def _execute_resilient(cell: Scenario, cfg, params,
+                       trace: List[RequestSpec],
+                       plan: Optional[faults_mod.DeviceLossPlan]) -> _Execution:
+    """Chunked serving under ResilientLoop + CheckpointStore.
+
+    The trace is split into ``max_batch``-request chunks (arrival order);
+    each chunk is one resilient *step*: serve it on a fresh engine, merge
+    its tokens into the fixed-shape state, checkpoint.  A crash mid-chunk
+    loses only the uncommitted chunk, and the replay regenerates it
+    bit-identically (greedy decode over a seeded trace).
+    """
+    chunks = [trace[i:i + cell.max_batch]
+              for i in range(0, len(trace), cell.max_batch)]
+    uid_row = {spec.uid: i for i, spec in enumerate(trace)}
+    R = len(trace)
+    crash = plan.make_crash_hook() if plan is not None else None
+    fail_chunk = (min(plan.fail_chunk, len(chunks) - 1)
+                  if plan is not None else -1)
+    # host-side per-chunk observations, overwritten on replay so the
+    # retried chunk counts exactly once in the aggregate
+    chunk_obs: Dict[int, Dict[str, Any]] = {}
+    rejected: Dict[int, List[Tuple[int, str]]] = {}
+
+    def make_state():
+        return {
+            "tokens": np.full((R, cell.max_new), -1, np.int32),
+            "served": np.zeros((R,), np.int32),
+        }
+
+    def step_fn(chunk_idx: int, state):
+        sub = chunks[chunk_idx]
+        base = min(s.arrive_step for s in sub)
+        rebased = [dataclasses.replace(s, arrive_step=s.arrive_step - base)
+                   for s in sub]
+        engine = ServeEngine(
+            cfg, params, max_batch=cell.max_batch, max_len=cell.max_len,
+            scheduler=cell.scheduler, block_size=cell.block_size,
+        )
+        feeder = TrafficFeeder(rebased)
+        engine.add_step_hook(feeder)
+        if crash is not None and chunk_idx == fail_chunk:
+            engine.add_step_hook(crash)
+        engine.run_until_drained()
+        tokens = np.array(state["tokens"])
+        served = np.array(state["served"])
+        lats, ttfts = [], []
+        for uid, r in engine.completed.items():
+            row = uid_row[uid]
+            tokens[row, : len(r.generated)] = r.generated
+            served[row] = len(r.generated)
+            if r.latency_s is not None:
+                lats.append(r.latency_s)
+            if r.ttft_s is not None:
+                ttfts.append(r.ttft_s)
+        chunk_obs[chunk_idx] = {"stats": engine.stats(),
+                                "lats": lats, "ttfts": ttfts}
+        rejected[chunk_idx] = feeder.rejected
+        return {"tokens": tokens, "served": served}
+
+    ckpt_dir = tempfile.mkdtemp(prefix="scenario-ckpt-")
+    try:
+        loop = ResilientLoop(
+            CheckpointStore(ckpt_dir),
+            FaultToleranceConfig(checkpoint_every=1, async_save=False,
+                                 max_restarts=4),
+            step_fn, make_state,
+        )
+        out = loop.run(total_steps=len(chunks))
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    tokens_arr = np.asarray(out["state"]["tokens"])
+    served = np.asarray(out["state"]["served"])
+    tokens = {
+        spec.uid: tokens_arr[uid_row[spec.uid], : int(served[uid_row[spec.uid]])]
+        .tolist()
+        for spec in trace if int(served[uid_row[spec.uid]]) > 0
+    }
+    # aggregate the per-chunk engines into one cell-level stats row
+    obs = [chunk_obs[i] for i in sorted(chunk_obs)]
+    totals = {k: sum(o["stats"][k] for o in obs) for k in (
+        "requests", "new_tokens", "fused_steps", "busy_slot_steps",
+        "slot_steps", "preemptions", "wall_s")}
+    lats = [v for o in obs for v in o["lats"]]
+    ttfts = [v for o in obs for v in o["ttfts"]]
+    rej = [r for i in sorted(rejected) for r in rejected[i]]
+    stats = {
+        "scheduler": cell.scheduler,
+        **{k: totals[k] for k in ("requests", "new_tokens", "fused_steps",
+                                  "busy_slot_steps", "slot_steps",
+                                  "preemptions")},
+        "slot_utilization": (totals["busy_slot_steps"] / totals["slot_steps"]
+                             if totals["slot_steps"] else 0.0),
+        "wall_s": totals["wall_s"],
+        "tok_s": (totals["new_tokens"] / totals["wall_s"]
+                  if totals["wall_s"] > 0 else 0.0),
+        "p50_latency_s": _percentile(lats, 50),
+        "p95_latency_s": _percentile(lats, 95),
+        "ttft_p50_s": _percentile(ttfts, 50),
+        "ttft_p95_s": _percentile(ttfts, 95),
+        "rejected": len(rej),
+        "restarts": int(out["restarts"]),
+    }
+    return _Execution(stats=stats, tokens=tokens, rejected=rej,
+                      restarts=int(out["restarts"]))
+
+
+def _execute(cell: Scenario, inject: bool) -> _Execution:
+    cfg, params = _params_for(cell.arch)
+    trace = sample_trace(cell, cfg.vocab)
+    plan = faults_mod.get_plan(cell.fault)
+    if inject:
+        trace = plan.mutate_trace(trace, cell)
+    if plan.resilient:
+        return _execute_resilient(cell, cfg, params, trace,
+                                  plan if inject else None)
+    hook = plan.make_hook(cell) if inject else None
+    return _execute_engine(cell, cfg, params, trace, fault_hook=hook)
+
+
+# ---------------------------------------------------------------------------
+# Cell results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellResult:
+    cell: Scenario
+    stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    tokens: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    rejected: List[Tuple[int, str]] = dataclasses.field(default_factory=list)
+    restarts: int = 0
+    golden_checked: bool = False
+    golden_diffs: List[str] = dataclasses.field(default_factory=list)
+    slo_failures: List[str] = dataclasses.field(default_factory=list)
+    error: str = ""
+
+    @property
+    def golden_ok(self) -> bool:
+        return not self.golden_diffs
+
+    @property
+    def ok(self) -> bool:
+        return not (self.error or self.golden_diffs or self.slo_failures)
+
+    def report(self) -> Dict[str, Any]:
+        """Machine-readable cell report (the ledger's scenario source)."""
+        return {
+            "kind": "scenario_cell",
+            "cell_id": self.cell.cell_id,
+            "ledger_key": self.cell.ledger_key,
+            "arch": self.cell.arch,
+            "scheduler": self.cell.scheduler,
+            "fault": self.cell.fault,
+            "seed": self.cell.seed,
+            "ok": self.ok,
+            "stats": self.stats,
+            "rejected": [{"uid": u, "reason": r} for u, r in self.rejected],
+            "restarts": self.restarts,
+            "golden_checked": self.golden_checked,
+            "golden_ok": self.golden_ok,
+            "golden_diffs": self.golden_diffs,
+            "slo_failures": self.slo_failures,
+            "error": self.error,
+            "requests": [
+                {"uid": uid, "new_tokens": len(toks)}
+                for uid, toks in sorted(self.tokens.items())
+            ],
+        }
+
+
+def _diff_tokens(faulted: Dict[int, List[int]],
+                 golden: Dict[int, List[int]]) -> List[str]:
+    """Served-stream differences (empty = bit-identical on every uid)."""
+    diffs = []
+    for uid in sorted(golden):
+        if uid not in faulted:
+            diffs.append(f"uid {uid}: served in golden twin, missing here")
+        elif faulted[uid] != golden[uid]:
+            diffs.append(
+                f"uid {uid}: tokens diverged ({faulted[uid]} != {golden[uid]})"
+            )
+    for uid in sorted(set(faulted) - set(golden)):
+        diffs.append(f"uid {uid}: served here, absent from the golden twin")
+    return diffs
+
+
+def run_cell(cell: Scenario, *, check_twin: bool = True) -> CellResult:
+    """Run one cell (and, when faulted, its golden twin) to a CellResult."""
+    result = CellResult(cell=cell)
+    try:
+        ex = _execute(cell, inject=True)
+    except Exception as e:  # noqa: BLE001 — a cell error fails the cell, not the matrix
+        result.error = f"{type(e).__name__}: {e}"
+        return result
+    result.stats = ex.stats
+    result.tokens = ex.tokens
+    result.rejected = ex.rejected
+    result.restarts = ex.restarts
+    if cell.fault != "none" and check_twin:
+        try:
+            twin = _execute(cell.twin(), inject=False)
+        except Exception as e:  # noqa: BLE001
+            result.error = f"golden twin failed: {type(e).__name__}: {e}"
+            return result
+        result.golden_checked = True
+        result.golden_diffs = _diff_tokens(result.tokens, twin.tokens)
+    result.slo_failures = cell.slo.check(result.stats)
+    return result
+
+
+def record_cell(result: CellResult, ledger=None):
+    """Append one BenchRun for this cell to the perf ledger; the row is
+    keyed ``scenario/<cell_id>`` so ``python -m repro.perf gate`` compares
+    each cell only against its own trajectory."""
+    from repro.perf.ledger import default_ledger, metrics_from_scenario
+
+    ledger = ledger or default_ledger()
+    return ledger.record(
+        metrics_from_scenario(result.report()),
+        meta={"sources": ["scenario"], "scenario": result.cell.cell_id,
+              "fault": result.cell.fault},
+    )
+
+
+def run_matrix(spec: MatrixSpec, *, only: Optional[str] = None,
+               jobs: int = 1, check_twin: bool = True,
+               record: bool = False, ledger=None) -> List[CellResult]:
+    """Expand and run the matrix; optionally record one BenchRun per cell.
+
+    ``only`` is an fnmatch glob over cell ids (``"*device-loss"``,
+    ``"*continuous*gpt2*"``); ``jobs > 1`` fans cells over a thread pool
+    (engines share compiled steps per (config, block_size), so threads
+    contend on host-side scheduling, not compilation).
+    """
+    cells = spec.cells()
+    if only:
+        cells = [c for c in cells if fnmatch.fnmatch(c.cell_id, only)]
+    if jobs > 1 and len(cells) > 1:
+        with ThreadPoolExecutor(max_workers=jobs) as pool:
+            results = list(pool.map(
+                lambda c: run_cell(c, check_twin=check_twin), cells))
+    else:
+        results = [run_cell(c, check_twin=check_twin) for c in cells]
+    if record:
+        for r in results:
+            if not r.error:
+                record_cell(r, ledger=ledger)
+    return results
+
+
+def format_matrix_markdown(results: List[CellResult]) -> str:
+    """The per-cell matrix report CI uploads."""
+    lines = [
+        "# Scenario matrix",
+        "",
+        f"{sum(r.ok for r in results)}/{len(results)} cells ok",
+        "",
+        "| cell | tok/s | p95 (s) | ttft p95 (s) | util | rej | pre | rst "
+        "| twin | slo |",
+        "|---|---:|---:|---:|---:|---:|---:|---:|:-:|:-:|",
+    ]
+    for r in results:
+        s = r.stats
+        if r.error:
+            lines.append(f"| `{r.cell.cell_id}` | — | — | — | — | — | — | — "
+                         f"| — | ERROR: {r.error} |")
+            continue
+        twin = ("=" if r.golden_checked and r.golden_ok
+                else ("DIFF" if r.golden_checked else "n/a"))
+        slo = "ok" if not r.slo_failures else "; ".join(r.slo_failures)
+        lines.append(
+            f"| `{r.cell.cell_id}` | {s.get('tok_s', 0):.1f} "
+            f"| {s.get('p95_latency_s', 0):.3f} "
+            f"| {s.get('ttft_p95_s', 0):.3f} "
+            f"| {s.get('slot_utilization', 0):.3f} "
+            f"| {s.get('rejected', 0)} | {s.get('preemptions', 0)} "
+            f"| {s.get('restarts', 0)} | {twin} | {slo} |"
+        )
+    lines.append("")
+    return "\n".join(lines)

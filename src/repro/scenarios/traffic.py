@@ -1,0 +1,92 @@
+"""Seeded traffic sampling: one cell -> one reproducible request trace.
+
+All randomness flows from the cell's derived seed through a single
+``numpy`` generator with a FIXED draw order (arrivals first, then per-uid
+length -> tokens -> stop cap), so the trace is a pure function of the
+spec — rerunning a matrix anywhere regenerates byte-identical traffic,
+and a faulted cell's golden twin (same seed, fault excluded from the
+seed derivation) serves exactly the same requests.
+
+Arrival times are measured in **fused decode steps** — the engine's own
+clock — not wall seconds: step-time varies by machine, and a
+wall-clock arrival process would make the admission pattern (hence slot
+scheduling, hence utilization) machine-dependent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.scenarios.matrix import ArrivalSpec, EosSpec, PromptSpec, Scenario
+
+
+@dataclasses.dataclass
+class RequestSpec:
+    """One sampled request: everything the engine's submit() needs, plus
+    the arrival step the feeder honors.  ``malformed`` marks requests a
+    fault plan injected expressly to be rejected ('' = well-formed)."""
+
+    uid: int
+    arrive_step: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int = -1
+    malformed: str = ""
+
+
+def _arrival_steps(spec: ArrivalSpec, n: int, rng: np.random.Generator) -> List[int]:
+    if spec.kind == "poisson":
+        gaps = rng.exponential(scale=1.0 / spec.rate, size=n)
+        return [int(t) for t in np.floor(np.cumsum(gaps) - gaps[0])]
+    if spec.kind == "bursty":
+        return [(i // spec.burst) * spec.gap for i in range(n)]
+    # replay: cycle the explicit offsets over the request count
+    steps = sorted(spec.steps[i % len(spec.steps)] for i in range(n))
+    return [int(s) for s in steps]
+
+
+def _prompt_len(spec: PromptSpec, rng: np.random.Generator) -> int:
+    if spec.kind == "uniform":
+        return int(rng.integers(spec.lo, spec.hi + 1))
+    if spec.kind == "fixed":
+        return spec.n
+    return spec.long if rng.random() < spec.p_long else spec.short
+
+
+def _stop_cap(spec: EosSpec, max_new: int, rng: np.random.Generator) -> int:
+    """Token budget under stochastic early stop: Geometric(p) capped at
+    the cell budget.  p_early == 0 -> always the full budget.  The draw
+    happens even at p == 0?  No — skipping it would shift later draws
+    between eos=0 and eos>0 cells, but eos is part of the traffic key, so
+    each eos choice is its own seeded stream and the order stays fixed
+    *within* a cell."""
+    if spec.p_early <= 0.0:
+        return max_new
+    return min(max_new, int(rng.geometric(spec.p_early)))
+
+
+def sample_trace(cell: Scenario, vocab: int) -> List[RequestSpec]:
+    """The cell's reproducible request trace, sorted by arrival step.
+
+    Prompt lengths are clamped so prompt + budget always fits the
+    per-slot cache — well-formed by construction; the *malformed* fault
+    plan injects its violations explicitly on top.
+    """
+    rng = np.random.default_rng(cell.seed)
+    arrivals = _arrival_steps(cell.arrival, cell.requests, rng)
+    out: List[RequestSpec] = []
+    for uid in range(cell.requests):
+        plen = _prompt_len(cell.prompt, rng)
+        plen = max(1, min(plen, cell.max_len - cell.max_new))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        out.append(RequestSpec(
+            uid=uid,
+            arrive_step=int(arrivals[uid]),
+            prompt=prompt,
+            max_new_tokens=_stop_cap(cell.eos, cell.max_new, rng),
+        ))
+    out.sort(key=lambda r: (r.arrive_step, r.uid))
+    return out

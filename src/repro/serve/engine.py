@@ -25,14 +25,26 @@ run every slot to the wave's horizon) as the golden-equivalence baseline:
 both schedulers feed identical per-request token sequences, so greedy
 outputs must match token-for-token while the continuous scheduler spends
 strictly fewer fused steps on ragged workloads.
+
+**Step hooks** let a traffic harness drive the engine from outside the
+drain loop: every scheduling iteration calls each hook with
+``hook(engine, busy) -> bool`` (the return value means "I may still
+deliver work").  Hooks submit mid-flight arrivals, inject faults
+(:meth:`ServeEngine.preempt`, a raised exception simulating device loss),
+or just observe.  Preempted requests are requeued with their progress and
+*replayed*: already-served tokens are fed back verbatim on resume, so a
+preemption can never change the served token stream — the scenario
+harness (:mod:`repro.scenarios`) asserts exactly that against a
+fault-free golden twin.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +55,35 @@ from repro.core import metrics as core_metrics
 from repro.models import transformer
 
 SCHEDULERS = ("continuous", "wave")
+
+#: A step hook: called once per scheduling iteration with (engine, busy);
+#: returns True while it may still deliver work (keeps the drain alive).
+StepHook = Callable[["ServeEngine", bool], bool]
+
+#: Spin cap for a fully idle engine whose hooks keep claiming pending
+#: work without ever submitting any — a misbehaving hook, not traffic.
+_MAX_IDLE_SPINS = 100_000
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode(cfg: ModelConfig):
+    """One compiled dense decode step per ModelConfig (configs are frozen
+    dataclasses, so engines serving the same config share the trace)."""
+    return jax.jit(lambda p, t, c: transformer.decode_step(p, cfg, t, c))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_paged(cfg: ModelConfig, block_size: int):
+    return jax.jit(
+        lambda p, t, c, pos, bt: transformer.decode_step_paged(
+            p, cfg, t, c, pos, bt, block_size=block_size
+        )
+    )
+
+
+@functools.lru_cache(maxsize=1)
+def _jit_reset_slots():
+    return jax.jit(transformer.reset_paged_slots)
 
 
 class RequestTooLong(ValueError):
@@ -66,6 +107,7 @@ class Request:
         self.done = False
         self.submitted_s: Optional[float] = None
         self.started_s: Optional[float] = None
+        self.first_token_s: Optional[float] = None
         self.finished_s: Optional[float] = None
 
     @property
@@ -75,6 +117,14 @@ class Request:
         if self.submitted_s is None or self.finished_s is None:
             return None
         return self.finished_s - self.submitted_s
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit -> first generated token (time-to-first-token).  Survives
+        preemption: replayed tokens never restamp it."""
+        if self.submitted_s is None or self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submitted_s
 
 
 class ServeEngine:
@@ -101,19 +151,23 @@ class ServeEngine:
         self.steps = 0
         self.busy_slot_steps = 0
         self.wall_s = 0.0
+        self.preemptions = 0
+        #: step hooks (see module docstring): traffic feeders, fault plans
+        self.step_hooks: List[StepHook] = []
         #: uid -> physical block ids the request occupied, in allocation
         #: order (pool-reuse introspection; continuous scheduler only)
         self.block_history: Dict[int, List[int]] = {}
-        self._decode = jax.jit(
-            lambda p, t, c: transformer.decode_step(p, cfg, t, c)
-        )
-        self._decode_paged = jax.jit(
-            lambda p, t, c, pos, bt: transformer.decode_step_paged(
-                p, cfg, t, c, pos, bt, block_size=block_size
-            )
-        )
-        self._reset_slots = jax.jit(transformer.reset_paged_slots)
+        self._decode = _jit_decode(cfg)
+        self._decode_paged = _jit_decode_paged(cfg, block_size)
+        self._reset_slots = _jit_reset_slots()
         self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
+        # token-work budget for the drain-loop runaway guard: grows with
+        # every submit (and preemption replay), so hook-fed traffic gets
+        # the same exact occupancy bound pre-submitted traffic always had
+        self._submitted_work = 0
+        # live continuous-drain state (positions/tables/free/slots); only
+        # non-None while _drain_continuous runs — preempt() needs it
+        self._live: Optional[Dict[str, Any]] = None
 
     # -- bookkeeping -----------------------------------------------------------
 
@@ -138,13 +192,73 @@ class ServeEngine:
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.uid}: empty prompt")
         req.submitted_s = time.time()
+        self._submitted_work += horizon
         self.queue.append(req)
+
+    def add_step_hook(self, hook: StepHook) -> None:
+        self.step_hooks.append(hook)
+
+    def _call_hooks(self, busy: bool) -> bool:
+        """Run every step hook; True while any may still deliver work."""
+        pending = False
+        for hook in self.step_hooks:
+            pending = bool(hook(self, busy)) or pending
+        return pending
 
     def _finish(self, req: Request) -> None:
         req.done = True
         if req.finished_s is None:
             req.finished_s = time.time()
         self.completed[req.uid] = req
+
+    def _note_first_token(self, req: Request) -> None:
+        if req.first_token_s is None:
+            req.first_token_s = time.time()
+
+    def preempt(self, uid: Optional[int] = None) -> Optional[int]:
+        """Evict one in-flight request from its slot (continuous only).
+
+        The request is requeued at the FRONT of the queue with its
+        ``generated`` tokens intact; on re-admission the engine replays
+        prompt + generated through the rebuilt cache and only then starts
+        appending, so the served stream is bit-identical to an unfaulted
+        run.  Picks ``uid``'s slot, or the deepest busy slot (max cache
+        position, lowest slot index on ties).  Returns the preempted uid,
+        or None when nothing was preemptible.  Only callable from a step
+        hook while the continuous scheduler is draining.
+        """
+        live = self._live
+        if live is None:
+            raise RuntimeError(
+                "preempt() is only available from a step hook while the "
+                "continuous scheduler is draining"
+            )
+        slot_req, positions = live["slot_req"], live["positions"]
+        block_tables, free = live["block_tables"], live["free"]
+        if uid is not None:
+            picks = [b for b, r in enumerate(slot_req)
+                     if r is not None and r.uid == uid]
+        else:
+            picks = sorted(
+                (b for b, r in enumerate(slot_req) if r is not None),
+                key=lambda b: (-int(positions[b]), b),
+            )
+        if not picks:
+            return None
+        b = picks[0]
+        req = slot_req[b]
+        # replay budget: the resumed run re-spends prompt + generated steps
+        self._submitted_work += len(req.prompt) + req.max_new_tokens
+        for j in range(block_tables.shape[1]):
+            if block_tables[b, j] != 0:
+                free.appendleft(int(block_tables[b, j]))
+        block_tables[b] = 0
+        positions[b] = 0
+        live["tokens"][b, 0] = 0
+        slot_req[b] = None
+        self.queue.appendleft(req)
+        self.preemptions += 1
+        return req.uid
 
     # -- wave scheduler (legacy lockstep, golden baseline) ---------------------
 
@@ -165,6 +279,7 @@ class ServeEngine:
             r.started_s = time.time()
 
         for t in range(horizon - 1):
+            self._call_hooks(busy=True)  # arrivals land in the NEXT wave
             self.busy_slot_steps += sum(1 for r in wave if not r.done)
             logits, cache = self._decode(self.params, jnp.asarray(tokens), cache)
             self.steps += 1
@@ -176,6 +291,7 @@ class ServeEngine:
                     tokens[s, 0] = r.prompt[t + 1]  # still consuming prompt
                 else:
                     tok = int(nxt[s])
+                    self._note_first_token(r)
                     r.generated.append(tok)
                     tokens[s, 0] = tok
                     if (len(r.generated) >= r.max_new_tokens or tok == r.eos_id):
@@ -188,7 +304,19 @@ class ServeEngine:
 
     def _drain_waves(self, max_waves: int) -> None:
         waves = 0
-        while self.queue:
+        idle_spins = 0
+        while True:
+            pending = self._call_hooks(busy=False)
+            if not self.queue:
+                if not pending:
+                    break
+                idle_spins += 1  # hooks promise work; let them deliver
+                if idle_spins > _MAX_IDLE_SPINS:
+                    raise RuntimeError(
+                        "step hooks report pending work but never submit"
+                    )
+                continue
+            idle_spins = 0
             if waves >= max_waves:
                 raise RuntimeError("serve loop did not drain")
             wave = [self.queue.popleft()
@@ -201,12 +329,6 @@ class ServeEngine:
     def _drain_continuous(self, max_steps: Optional[int]) -> None:
         B, bs = self.max_batch, self.block_size
         nb_slot = self.max_len // bs
-        if max_steps is None:
-            # exact occupancy bound: a request holds its slot for at most
-            # prompt + max_new - 1 steps, so total work is a hard cap
-            max_steps = sum(
-                len(r.prompt) + r.max_new_tokens for r in self.queue
-            ) + B
         cache = transformer.init_paged_cache(self.cfg, B, self.max_len, bs)
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
@@ -214,65 +336,102 @@ class ServeEngine:
         slot_req: List[Optional[Request]] = [None] * B
         tokens = np.zeros((B, 1), np.int32)
         reset_mask = np.zeros(B, bool)
+        self._live = {
+            "positions": positions, "block_tables": block_tables,
+            "free": free, "slot_req": slot_req, "tokens": tokens,
+        }
+        idle_spins = 0
 
-        while True:
-            # refill: finished slots take the next queued request NOW —
-            # the lane is re-predicated, not idled until a wave drains
-            for b in range(B):
-                if slot_req[b] is None and self.queue:
-                    r = self.queue.popleft()
-                    slot_req[b] = r
-                    r.started_s = time.time()
-                    positions[b] = 0
-                    block_tables[b] = 0
-                    tokens[b, 0] = r.prompt[0]
-                    reset_mask[b] = True
-            if all(r is None for r in slot_req):
-                break
-            if self.steps >= max_steps:
-                raise RuntimeError("serve loop did not drain")
-            # allocate the write block for any slot whose position entered
-            # an unmapped logical block (covers fresh admissions at 0 too)
-            for b, r in enumerate(slot_req):
-                if r is not None:
-                    j = positions[b] // bs
-                    if block_tables[b, j] == 0:
-                        blk = free.popleft()
-                        block_tables[b, j] = blk
-                        self.block_history.setdefault(r.uid, []).append(blk)
-            if self._has_state and reset_mask.any():
-                cache = self._reset_slots(cache, jnp.asarray(reset_mask))
-            reset_mask[:] = False
+        try:
+            while True:
+                pending = self._call_hooks(
+                    busy=any(r is not None for r in slot_req)
+                )
+                # refill: finished slots take the next queued request NOW —
+                # the lane is re-predicated, not idled until a wave drains
+                for b in range(B):
+                    if slot_req[b] is None and self.queue:
+                        r = self.queue.popleft()
+                        slot_req[b] = r
+                        if r.started_s is None:
+                            r.started_s = time.time()
+                        positions[b] = 0
+                        block_tables[b] = 0
+                        tokens[b, 0] = r.prompt[0]
+                        reset_mask[b] = True
+                if all(r is None for r in slot_req):
+                    if not pending:
+                        break
+                    idle_spins += 1  # hooks promise work; let them deliver
+                    if idle_spins > _MAX_IDLE_SPINS:
+                        raise RuntimeError(
+                            "step hooks report pending work but never submit"
+                        )
+                    continue
+                idle_spins = 0
+                # exact occupancy bound: a request holds its slot for at
+                # most prompt + max_new - 1 steps (replays re-budgeted at
+                # preemption), so submitted work is a hard cap
+                budget = (max_steps if max_steps is not None
+                          else self._submitted_work + B)
+                if self.steps >= budget:
+                    raise RuntimeError("serve loop did not drain")
+                # allocate the write block for any slot whose position entered
+                # an unmapped logical block (covers fresh admissions at 0 too)
+                for b, r in enumerate(slot_req):
+                    if r is not None:
+                        j = positions[b] // bs
+                        if block_tables[b, j] == 0:
+                            blk = free.popleft()
+                            block_tables[b, j] = blk
+                            self.block_history.setdefault(r.uid, []).append(blk)
+                if self._has_state and reset_mask.any():
+                    cache = self._reset_slots(cache, jnp.asarray(reset_mask))
+                reset_mask[:] = False
 
-            self.busy_slot_steps += sum(1 for r in slot_req if r is not None)
-            logits, cache = self._decode_paged(
-                self.params, jnp.asarray(tokens), cache,
-                jnp.asarray(positions), jnp.asarray(block_tables),
-            )
-            self.steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
-            for b, r in enumerate(slot_req):
-                if r is None:
-                    continue
-                t = int(positions[b])
-                positions[b] = t + 1
-                if t + 1 < len(r.prompt):
-                    tokens[b, 0] = r.prompt[t + 1]  # still consuming prompt
-                    continue
-                tok = int(nxt[b])
-                r.generated.append(tok)
-                tokens[b, 0] = tok
-                if (len(r.generated) >= r.max_new_tokens or tok == r.eos_id):
-                    self._finish(r)
-                    # free the slot's blocks back to the pool (LIFO: the
-                    # next admission reuses this request's blocks first)
-                    for j in range(nb_slot):
-                        if block_tables[b, j] != 0:
-                            free.appendleft(int(block_tables[b, j]))
-                    block_tables[b] = 0
-                    positions[b] = 0
-                    tokens[b, 0] = 0
-                    slot_req[b] = None
+                self.busy_slot_steps += sum(
+                    1 for r in slot_req if r is not None
+                )
+                logits, cache = self._decode_paged(
+                    self.params, jnp.asarray(tokens), cache,
+                    jnp.asarray(positions), jnp.asarray(block_tables),
+                )
+                self.steps += 1
+                nxt = np.asarray(
+                    jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1)
+                )
+                for b, r in enumerate(slot_req):
+                    if r is None:
+                        continue
+                    t = int(positions[b])
+                    positions[b] = t + 1
+                    if t + 1 < len(r.prompt):
+                        tokens[b, 0] = r.prompt[t + 1]  # still consuming prompt
+                        continue
+                    gi = t + 1 - len(r.prompt)
+                    if gi < len(r.generated):
+                        # replay after preemption: this token was already
+                        # served — feed it back, never re-append
+                        tokens[b, 0] = r.generated[gi]
+                        continue
+                    tok = int(nxt[b])
+                    self._note_first_token(r)
+                    r.generated.append(tok)
+                    tokens[b, 0] = tok
+                    if (len(r.generated) >= r.max_new_tokens
+                            or tok == r.eos_id):
+                        self._finish(r)
+                        # free the slot's blocks back to the pool (LIFO: the
+                        # next admission reuses this request's blocks first)
+                        for j in range(nb_slot):
+                            if block_tables[b, j] != 0:
+                                free.appendleft(int(block_tables[b, j]))
+                        block_tables[b] = 0
+                        positions[b] = 0
+                        tokens[b, 0] = 0
+                        slot_req[b] = None
+        finally:
+            self._live = None
 
     # -- public ----------------------------------------------------------------
 
@@ -294,6 +453,10 @@ class ServeEngine:
             r.latency_s for r in self.completed.values()
             if r.latency_s is not None
         )
+        ttft = sorted(
+            r.ttft_s for r in self.completed.values()
+            if r.ttft_s is not None
+        )
         new_tokens = sum(len(r.generated) for r in self.completed.values())
         return {
             "scheduler": self.scheduler,
@@ -303,8 +466,11 @@ class ServeEngine:
             "busy_slot_steps": self.busy_slot_steps,
             "slot_steps": self.total_slot_steps,
             "slot_utilization": self.slot_utilization,
+            "preemptions": self.preemptions,
             "wall_s": self.wall_s,
             "tok_s": new_tokens / self.wall_s if self.wall_s > 0 else 0.0,
             "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft else 0.0,
         }

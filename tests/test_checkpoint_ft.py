@@ -151,3 +151,74 @@ def test_straggler_detector():
     assert det.observe(0.5) is True
     assert det.events == 1
     assert det.observe(0.11) is False
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance under the serve path
+# ---------------------------------------------------------------------------
+
+
+def test_serve_restart_resumes_bit_identical_token_stream(tmp_path):
+    """Kill the serve drain mid-chunk, restore from the checkpoint store,
+    and assert the resumed token stream bit-matches the uninterrupted
+    golden run — the serving analogue of exact training replay."""
+    import repro.configs as configs
+    from repro.serve.engine import Request, ServeEngine
+    from repro.train import steps as steps_mod
+
+    cfg = configs.get_smoke_config("gpt2-124m")
+    params = steps_mod.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=int(rng.integers(4, 10)))
+               .astype(np.int32) for _ in range(4)]
+
+    def serve_all():
+        """Uninterrupted golden run: one engine, all requests."""
+        engine = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                             scheduler="continuous", block_size=8)
+        for uid, p in enumerate(prompts):
+            engine.submit(Request(uid=uid, prompt=p, max_new_tokens=4))
+        return {u: r.generated for u, r in engine.run_until_drained().items()}
+
+    golden = serve_all()
+
+    # resilient run: 2-request chunks, each chunk one checkpointed step;
+    # the second chunk's first attempt dies mid-drain
+    chunks = [(0, 1), (2, 3)]
+    crashed = {"left": 1}
+
+    def step_fn(chunk_idx, state):
+        engine = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                             scheduler="continuous", block_size=8)
+        for uid in chunks[chunk_idx]:
+            engine.submit(Request(uid=uid, prompt=prompts[uid],
+                                  max_new_tokens=4))
+
+        def killer(eng, busy):
+            if chunk_idx == 1 and crashed["left"] and eng.steps >= 2:
+                crashed["left"] -= 1
+                raise RuntimeError("simulated device loss mid-drain")
+            return False
+
+        engine.add_step_hook(killer)
+        done = engine.run_until_drained()
+        toks = np.array(state["tokens"])
+        for uid, r in done.items():
+            toks[uid, : len(r.generated)] = r.generated
+        return {"tokens": toks}
+
+    loop = ResilientLoop(
+        CheckpointStore(str(tmp_path)),
+        FaultToleranceConfig(checkpoint_every=1, async_save=False,
+                             max_restarts=3),
+        step_fn,
+        lambda: {"tokens": np.full((4, 4), -1, np.int32)},
+    )
+    out = loop.run(total_steps=len(chunks))
+    assert out["restarts"] == 1, "the injected death must actually fire"
+    resumed = np.asarray(out["state"]["tokens"])
+    for uid, toks in golden.items():
+        assert resumed[uid].tolist() == toks, (
+            f"req {uid}: resumed stream {resumed[uid].tolist()} != "
+            f"golden {toks}"
+        )

@@ -21,6 +21,7 @@ DOCS = [
     "docs/TUNING.md",
     "docs/PERF.md",
     "docs/SERVING.md",
+    "docs/SCENARIOS.md",
 ]
 
 _BLOCK_RE = re.compile(r"```python\n(.*?)```", re.DOTALL)
@@ -62,3 +63,4 @@ def test_readme_links_docs():
     assert "docs/TUNING.md" in readme
     assert "docs/PERF.md" in readme
     assert "docs/SERVING.md" in readme
+    assert "docs/SCENARIOS.md" in readme

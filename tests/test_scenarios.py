@@ -1,0 +1,339 @@
+"""Scenario-matrix harness contract.
+
+* Matrix expansion is deterministic and seeded: same spec => same cells,
+  same seeds, same sampled traffic; the fault axis and the scheduler are
+  excluded from seed derivation so a faulted cell's golden twin (and the
+  other scheduler's cell) sample byte-identical requests.
+* Every fault plan preserves the served token streams exactly: preempted,
+  device-lost, and malformed-traffic cells must all match their fault-free
+  golden twin uid-for-uid, token-for-token.
+* One BenchRun per cell lands in the perf ledger under
+  ``scenario/<cell_id>`` and ``python -m repro.perf gate`` gates it.
+* SLO violations fail the cell and the gate CLI exits non-zero.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.perf.gate import gate_run
+from repro.perf.ledger import Ledger, metrics_from_scenario
+from repro.scenarios import (
+    ArrivalSpec,
+    EosSpec,
+    MatrixSpec,
+    PromptSpec,
+    SLOSpec,
+    get_plan,
+    sample_trace,
+    smoke_matrix,
+)
+from repro.scenarios.runner import (
+    format_matrix_markdown,
+    record_cell,
+    run_cell,
+    run_matrix,
+)
+
+
+def _tiny_matrix(**over) -> MatrixSpec:
+    """Smallest matrix that still exercises queueing + slot refill."""
+    kw = dict(
+        arrivals=[ArrivalSpec(kind="poisson", rate=0.5)],
+        prompts=[PromptSpec(kind="uniform", lo=4, hi=10)],
+        eos=[EosSpec(p_early=0.1)],
+        schedulers=["continuous"],
+        archs=["gpt2-124m"],
+        faults=["none"],
+        requests=4,
+        max_new=4,
+        max_batch=2,
+        max_len=32,
+        block_size=8,
+    )
+    kw.update(over)
+    return MatrixSpec(**kw)
+
+
+def _cell(fault="none", **over):
+    cells = _tiny_matrix(faults=[fault], **over).cells()
+    assert len(cells) == 1
+    return cells[0]
+
+
+# ---------------------------------------------------------------------------
+# matrix expansion + seeding
+# ---------------------------------------------------------------------------
+
+
+def test_expansion_is_deterministic():
+    a, b = smoke_matrix().cells(), smoke_matrix().cells()
+    assert [c.cell_id for c in a] == [c.cell_id for c in b]
+    assert [c.seed for c in a] == [c.seed for c in b]
+    assert len(a) == len({c.cell_id for c in a}), "cell ids must be unique"
+
+
+def test_preempt_skipped_under_wave_scheduler():
+    ids = [c.cell_id for c in smoke_matrix().cells()]
+    assert any("/continuous/" in i and i.endswith("/preempt") for i in ids)
+    assert not any("/wave/" in i and i.endswith("/preempt") for i in ids)
+
+
+def test_twin_and_cross_scheduler_share_traffic_seed():
+    spec = _tiny_matrix(schedulers=["continuous", "wave"],
+                        faults=["none", "malformed"])
+    cells = {c.cell_id: c for c in spec.cells()}
+    assert len({c.seed for c in cells.values()}) == 1, (
+        "scheduler and fault must be outside the traffic key"
+    )
+    faulted = next(c for c in cells.values() if c.fault == "malformed")
+    twin = faulted.twin()
+    assert twin.fault == "none" and twin.seed == faulted.seed
+
+
+def test_matrix_spec_json_roundtrip(tmp_path):
+    spec = smoke_matrix()
+    p = tmp_path / "m.json"
+    p.write_text(json.dumps(spec.to_dict()))
+    back = MatrixSpec.from_json(str(p))
+    assert [c.cell_id for c in back.cells()] == [
+        c.cell_id for c in spec.cells()]
+    assert [c.seed for c in back.cells()] == [c.seed for c in spec.cells()]
+
+
+# ---------------------------------------------------------------------------
+# traffic sampling
+# ---------------------------------------------------------------------------
+
+
+def test_trace_is_reproducible_and_twin_identical():
+    cell = _cell("preempt")
+    t1, t2 = sample_trace(cell, vocab=256), sample_trace(cell, vocab=256)
+    tw = sample_trace(cell.twin(), vocab=256)
+    for other in (t2, tw):
+        assert len(t1) == len(other)
+        for a, b in zip(t1, other):
+            assert (a.uid, a.arrive_step, a.max_new_tokens) == (
+                b.uid, b.arrive_step, b.max_new_tokens)
+            np.testing.assert_array_equal(a.prompt, b.prompt)
+
+
+def test_trace_well_formed_by_construction():
+    cell = _cell(prompts=[PromptSpec(kind="uniform", lo=4, hi=100)])
+    for spec in sample_trace(cell, vocab=256):
+        assert 1 <= len(spec.prompt) <= cell.max_len - cell.max_new
+        assert 1 <= spec.max_new_tokens <= cell.max_new
+
+
+def test_arrival_processes():
+    rng = np.random.default_rng
+    from repro.scenarios.traffic import _arrival_steps
+
+    bursty = _arrival_steps(ArrivalSpec(kind="bursty", burst=2, gap=10),
+                            6, rng(0))
+    assert bursty == [0, 0, 10, 10, 20, 20]
+    replay = _arrival_steps(ArrivalSpec(kind="replay", steps=(5, 0, 9)),
+                            5, rng(0))
+    assert replay == sorted(replay) and replay[0] == 0
+    poisson = _arrival_steps(ArrivalSpec(kind="poisson", rate=0.5),
+                             8, rng(0))
+    assert poisson[0] == 0 and poisson == sorted(poisson)
+
+
+def test_eos_cap_distribution():
+    cell = _cell(eos=[EosSpec(p_early=0.0)])
+    assert all(s.max_new_tokens == cell.max_new
+               for s in sample_trace(cell, vocab=64))
+    ragged = _cell(eos=[EosSpec(p_early=0.6)], requests=8)
+    caps = {s.max_new_tokens for s in sample_trace(ragged, vocab=64)}
+    assert min(caps) >= 1 and len(caps) > 1, "p_early=0.6 should go ragged"
+
+
+def test_slo_check_floors_and_ceilings():
+    slo = SLOSpec(min_tok_s=1.0, max_p95_latency_s=2.0,
+                  max_ttft_p95_s=2.0, min_slot_utilization=0.5)
+    ok = {"tok_s": 5.0, "p95_latency_s": 0.1, "ttft_p95_s": 0.1,
+          "slot_utilization": 0.9}
+    assert slo.check(ok) == []
+    bad = dict(ok, tok_s=0.5, p95_latency_s=9.0)
+    msgs = slo.check(bad)
+    assert len(msgs) == 2 and any("tok/s" in m for m in msgs)
+    assert any("missing" in m for m in slo.check({}))
+
+
+# ---------------------------------------------------------------------------
+# fault plans: golden-twin token equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def preempt_result():
+    return run_cell(_cell("preempt"))
+
+
+def test_preempt_cell_matches_golden_twin(preempt_result):
+    r = preempt_result
+    assert r.error == ""
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["preemptions"] >= 1, "the fault must actually fire"
+    assert r.slo_failures == []
+    assert r.ok
+
+
+def test_malformed_cell_rejects_and_matches_twin():
+    r = run_cell(_cell("malformed"))
+    assert r.error == ""
+    assert len(r.rejected) == 2, "oversized + empty must both be rejected"
+    assert {u for u, _ in r.rejected} == {100_000, 100_001}
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["rejected"] == 2
+
+
+def test_device_loss_cell_restarts_and_matches_twin():
+    r = run_cell(_cell("device-loss"))
+    assert r.error == ""
+    assert r.restarts >= 1, "the simulated device loss must actually fire"
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["restarts"] == r.restarts
+
+
+def test_fault_plan_registry():
+    assert get_plan("none").name == "none"
+    assert get_plan("device-loss").resilient
+    assert not get_plan("preempt").resilient
+    with pytest.raises(KeyError):
+        get_plan("cosmic-ray")
+
+
+# ---------------------------------------------------------------------------
+# ledger recording + perf gate
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_from_scenario_schema(preempt_result):
+    metrics = metrics_from_scenario(preempt_result.report())
+    (key, row), = metrics.items()
+    assert key == preempt_result.cell.ledger_key
+    assert key.startswith("scenario/")
+    for name in ("tok_s", "slot_utilization", "ttft_p50_s", "ttft_p95_s",
+                 "preemptions", "rejected", "restarts"):
+        assert name in row, f"missing {name}"
+    assert row["golden_ok"] is True and row["slo_ok"] is True
+
+
+def test_recorded_cell_gates_against_its_own_trajectory(
+        tmp_path, preempt_result):
+    ledger = Ledger(str(tmp_path))
+    first = record_cell(preempt_result, ledger=ledger)
+    assert first.meta["sources"] == ["scenario"]
+    # identical stats re-recorded: the per-cell gate must PASS (the
+    # latest-comparable fallback pairs runs on the shared scenario/ key)
+    second = record_cell(preempt_result, ledger=ledger)
+    gate = gate_run(second, ledger, tuning_store=None)
+    assert gate.ok, [r.describe() for r in gate.comparison.regressions]
+    assert preempt_result.cell.ledger_key in second.metrics
+
+
+def test_golden_flip_and_new_faults_regress(tmp_path, preempt_result):
+    ledger = Ledger(str(tmp_path))
+    good = metrics_from_scenario(preempt_result.report())
+    ledger.record(good)
+    key = preempt_result.cell.ledger_key
+    bad = {key: dict(good[key], golden_ok=False,
+                     rejected=good[key]["rejected"] + 1)}
+    run = ledger.record(bad)
+    gate = gate_run(run, ledger, tuning_store=None)
+    assert not gate.ok
+    names = {r.metric for r in gate.comparison.regressions}
+    assert {"golden_ok", "rejected"} <= names
+
+
+def test_slo_violation_fails_cell():
+    cell = _cell("none", slo=SLOSpec(min_tok_s=1e12))
+    r = run_cell(cell)
+    assert r.error == "" and r.slo_failures and not r.ok
+
+
+# ---------------------------------------------------------------------------
+# runner + CLI surface
+# ---------------------------------------------------------------------------
+
+
+def test_run_matrix_only_filter_and_markdown(tmp_path):
+    spec = _tiny_matrix(faults=["none", "malformed"])
+    results = run_matrix(spec, only="*malformed", record=True,
+                         ledger=Ledger(str(tmp_path)))
+    assert [r.cell.fault for r in results] == ["malformed"]
+    md = format_matrix_markdown(results)
+    assert "| cell |" in md and results[0].cell.cell_id in md
+    assert Ledger(str(tmp_path)).latest() is not None
+
+
+def test_ttft_tracked_per_request(preempt_result):
+    s = preempt_result.stats
+    assert s["ttft_p50_s"] > 0.0
+    assert s["ttft_p95_s"] >= s["ttft_p50_s"]
+    assert s["ttft_p50_s"] <= s["p50_latency_s"] + 1e-9
+
+
+def _cli_env():
+    src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    return {**os.environ, "PYTHONPATH": src}
+
+
+def test_cli_list_and_gate(tmp_path):
+    env_cells = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios", "list",
+         "--only", "*continuous/gpt2-124m/*"],
+        capture_output=True, text=True, check=True, env=_cli_env())
+    ids = env_cells.stdout.split()
+    assert ids and all(i.endswith(("none", "preempt", "device-loss",
+                                   "malformed")) for i in ids)
+
+    out = tmp_path / "report.json"
+    md = tmp_path / "matrix.md"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios", "gate",
+         "--only", "*continuous/gpt2-124m/none",
+         "--out", str(out), "--report-md", str(md)],
+        capture_output=True, text=True, env=_cli_env())
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "all cells ok" in proc.stdout
+    report = json.loads(out.read_text())
+    assert report["kind"] == "scenario_matrix"
+    assert all(c["ok"] for c in report["cells"])
+    assert md.read_text().startswith("# Scenario matrix")
+
+
+def test_launch_serve_counts_rejections_instead_of_crashing(tmp_path):
+    """Submit-time RequestTooLong must be counted and reported by the
+    serve driver, never escape as a crash."""
+    from repro.launch.serve import main as serve_main
+    from repro.perf.ledger import metrics_from_serving
+
+    out = tmp_path / "serve.json"
+    # every sampled prompt (4..16 tokens) + a 100-token budget overflows
+    # the 64-token slot cache: all submissions must be rejected
+    rc = serve_main(["--requests", "3", "--max-new", "100",
+                     "--max-len", "64", "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["rejected"] == 3
+    assert len(report["rejections"]) == 3
+    assert all("exceeds" in r["reason"] for r in report["rejections"])
+    assert report["stats"]["requests"] == 0  # nothing reached the engine
+    (_, row), = metrics_from_serving(report).items()
+    assert row["rejected"] == 3
+
+
+def test_cli_gate_fails_on_no_match():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios", "gate",
+         "--only", "no-such-cell"],
+        capture_output=True, text=True, env=_cli_env())
+    assert proc.returncode == 2

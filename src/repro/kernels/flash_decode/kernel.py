@@ -200,3 +200,212 @@ def flash_decode_paged(
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
     )(block_tables, q, kt, vt, valid_len)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash prefill over the paged cache
+# ---------------------------------------------------------------------------
+
+
+def _prefill_commit_kernel(bt_ref, qs_ref, ql_ref, kn_ref, vn_ref,
+                           kp_ref, vp_ref, ko_ref, vo_ref, *, bs: int, C: int):
+    """Scatter the chunk's K/V rows into one pool block of one slot.
+
+    Grid (B, nb): every logical block of slot ``b`` streams through VMEM;
+    rows whose global position lands in ``[q_start, q_start + q_len)`` are
+    overlaid with the chunk's new K/V, the rest are copied through
+    unchanged, and the block is written back to the (input-aliased) pool.
+    Blocks no table row names are never visited and keep their bytes via
+    the aliasing; the NULL block (0) may be written by several slots at
+    once, so its content stays unspecified — exactly the idle-write
+    contract the serving engine already relies on.
+    """
+    si = pl.program_id(1)
+    q_start = qs_ref[0]
+    q_len = ql_ref[0]
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    c_idx = pos - q_start
+    in_chunk = (c_idx >= 0) & (c_idx < q_len)  # valid_len predication
+    c_clip = jnp.clip(c_idx, 0, C - 1)
+    k_blk = kp_ref[0]  # (KV, bs, D)
+    v_blk = vp_ref[0]
+    k_over = jnp.take(kn_ref[0], c_clip, axis=1)  # (KV, bs, D) chunk rows
+    v_over = jnp.take(vn_ref[0], c_clip, axis=1)
+    sel = in_chunk[None, :, None]
+    ko_ref[0] = jnp.where(sel, k_over, k_blk)
+    vo_ref[0] = jnp.where(sel, v_over, v_blk)
+
+
+def _prefill_attn_kernel(bt_ref, q_ref, k_ref, v_ref, qs_ref, ql_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         block_c: int, block_s: int, ns: int, G: int):
+    """Causal online-softmax over one (query-tile, KV-block) grid cell.
+
+    Same running (max, sum, acc) recurrence as :func:`_decode_kernel_paged`
+    lifted to a ``block_c``-row query tile: the G grouped query heads of
+    every chunk row are flattened into the tile so one MXU contraction
+    covers the whole (block_c*G, block_s) score panel.  KV blocks beyond
+    the tile's causal frontier are never issued — prompt-length
+    predication, one level up from the decode kernel's ``valid_len``.
+    """
+    qi = pl.program_id(2)
+    si = pl.program_id(3)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qs_ref[0]
+    q = q_ref[0, 0]  # (block_c, G, D)
+    D = q.shape[-1]
+    q = q.reshape(block_c * G, D)
+    k = k_ref[0, 0]  # (block_s, D)
+    v = v_ref[0, 0]
+    scale = 1.0 / math.sqrt(D)
+
+    pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)[0]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (block_c, G), 0).reshape(
+        block_c * G
+    ) + qi * block_c
+    limit = q_start + q_idx  # last key position each query row may see
+
+    # skip KV blocks entirely beyond this query tile's causal frontier
+    @pl.when(si * block_s <= q_start + (qi + 1) * block_c - 1)
+    def _work():
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(pos[None, :] <= limit[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m_ref[...], s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (
+            (acc_ref[...] / l[:, None]).reshape(block_c, G, D).astype(o_ref.dtype)
+        )
+
+
+def flash_prefill_paged(
+    q: jax.Array,             # (B, C, KV, G, D) — chunk queries
+    k_new: jax.Array,         # (B, C, KV, D) — chunk keys
+    v_new: jax.Array,         # (B, C, KV, D) — chunk values
+    k_pool: jax.Array,        # (n_blocks, block_size, KV, D)
+    v_pool: jax.Array,        # (n_blocks, block_size, KV, D)
+    block_tables: jax.Array,  # (B, nb) int32 — logical -> pool block map
+    q_start: jax.Array,       # (B,) int32 — live context length before chunk
+    q_len: jax.Array = None,  # (B,) int32 — valid chunk rows (default C)
+    *,
+    block_c: int = 8,
+    block_s: int = 0,
+    interpret: bool = True,
+):
+    """Chunked flash prefill over a PAGED cache: commit + attend, fused
+    per chunk instead of per token.
+
+    A chunk of ``C`` prompt tokens per slot is (1) scattered straight into
+    the slot's pool blocks — the commit kernel walks the scalar-prefetched
+    block table exactly like :func:`flash_decode_paged`, overlaying rows in
+    ``[q_start, q_start + q_len)`` — and (2) attended causally against the
+    updated pool with a ``block_c``-row online softmax, so a P-token prompt
+    costs ``ceil(P / C)`` kernel launches instead of ``P``.  ``block_s``
+    sub-tiles pool blocks (0 means one tile per pool block).
+
+    Requirements and contract:
+    * every chunk position must already be backed by a real (non-NULL)
+      block-table entry — the engine allocates before it commits;
+    * rows at or past ``q_len[b]`` are neither committed nor defined in the
+      output (ragged final chunks);
+    * the NULL block and pool blocks no table row references have
+      unspecified content on return — compare through block tables.
+
+    Returns ``(out, k_pool', v_pool')`` with ``out`` shaped like ``q`` and
+    the pools in their caller layout.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, C, KV, G, D = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    if q_len is None:
+        q_len = jnp.full((B,), C, jnp.int32)
+    bc = min(block_c, C)
+    assert C % bc == 0, (C, bc)
+    bks = bs if not block_s else min(block_s, bs)
+    assert bs % bks == 0, (bs, bks)
+    spp = bs // bks  # KV sub-tiles per pool block
+    ns = nb * spp
+
+    kp = k_pool.transpose(0, 2, 1, 3)  # (n_blocks, KV, bs, D): head-major
+    vp = v_pool.transpose(0, 2, 1, 3)
+    kn = k_new.transpose(0, 2, 1, 3)   # (B, KV, C, D)
+    vn = v_new.transpose(0, 2, 1, 3)
+
+    commit_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, s, bt: (b,)),
+            pl.BlockSpec((1,), lambda b, s, bt: (b,)),
+            pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
+            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
+            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
+            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
+        ],
+    )
+    kp, vp = pl.pallas_call(
+        functools.partial(_prefill_commit_kernel, bs=bs, C=C),
+        grid_spec=commit_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(kp.shape, kp.dtype),
+            jax.ShapeDtypeStruct(vp.shape, vp.dtype),
+        ],
+        # pool operands alias their outputs so unvisited blocks keep their
+        # bytes (indices count the scalar-prefetch operand)
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(block_tables, q_start, q_len, kn, vn, kp, vp)
+
+    qh = q.transpose(0, 2, 1, 3, 4)  # (B, KV, C, G, D)
+    attn_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, C // bc, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, bc, G, D),
+                         lambda b, h, qi, s, bt: (b, h, qi, 0, 0)),
+            pl.BlockSpec((1, 1, bks, D),
+                         lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
+            pl.BlockSpec((1, 1, bks, D),
+                         lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
+            pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
+            pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bc, G, D),
+                               lambda b, h, qi, s, bt: (b, h, qi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bc * G,), jnp.float32),
+            pltpu.VMEM((bc * G,), jnp.float32),
+            pltpu.VMEM((bc * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_prefill_attn_kernel, block_c=bc, block_s=bks,
+                          ns=ns, G=G),
+        grid_spec=attn_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, C, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, qh, kp, vp, q_start, q_len)
+
+    return (out.transpose(0, 2, 1, 3, 4),
+            kp.transpose(0, 2, 1, 3), vp.transpose(0, 2, 1, 3))

@@ -1,6 +1,8 @@
 """Flash-decode kernel call surface (served by the kernel registry).
 
-``flash_decode`` is the registry-managed contiguous-cache op.  The paged
+``flash_decode`` is the registry-managed contiguous-cache op, and
+``flash_prefill`` the registry-managed chunked-prefill op (its tuning
+space covers the chunk-tile x KV-tile x ELEN axes).  The paged decode
 variant (block-table indirection via scalar prefetch, the continuous-
 batching serve path) is exported directly from the kernel module — its
 block-pool calling convention doesn't fit the registry's
@@ -9,7 +11,13 @@ same-shaped-ref contract for event capture.
 
 from __future__ import annotations
 
-from repro.kernels.flash_decode.kernel import flash_decode_paged
+from repro.kernels.flash_decode.kernel import flash_decode_paged, flash_prefill_paged
 from repro.kernels.registry import FLASH_DECODE as flash_decode
+from repro.kernels.registry import FLASH_PREFILL as flash_prefill
 
-__all__ = ["flash_decode", "flash_decode_paged"]
+__all__ = [
+    "flash_decode",
+    "flash_decode_paged",
+    "flash_prefill",
+    "flash_prefill_paged",
+]

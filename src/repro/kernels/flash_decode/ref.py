@@ -35,6 +35,53 @@ def decode_paged_ref(q, k_pool, v_pool, block_tables, valid_len):
     return decode_ref(q, k, v, valid_len)
 
 
+def prefill_paged_ref(q, k_new, v_new, k_pool, v_pool, block_tables,
+                      q_start, q_len=None):
+    """Chunked-prefill oracle: scatter the chunk into the pools through the
+    block tables, then run dense causal attention over each slot's gathered
+    view.  q (B,C,KV,G,D); k/v_new (B,C,KV,D); pools (n_blocks,bs,KV,D);
+    block_tables (B,nb); q_start/q_len (B,).  Returns (out, k_pool',
+    v_pool') — the same contract as ``flash_prefill_paged`` (rows at or
+    past ``q_len`` are neither committed nor defined in the output)."""
+    B, C, KV, G, D = q.shape
+    bs = k_pool.shape[1]
+    nb = block_tables.shape[1]
+    if q_len is None:
+        q_len = jnp.full((B,), C, jnp.int32)
+    pos = q_start[:, None] + jnp.arange(C)[None, :]           # (B, C) global
+    blk = jnp.take_along_axis(block_tables, pos // bs, axis=1)
+    flat = blk * bs + pos % bs                                # (B, C)
+    valid = jnp.arange(C)[None, :] < q_len[:, None]
+    kf = k_pool.reshape(-1, KV, D)
+    vf = v_pool.reshape(-1, KV, D)
+    idx = jnp.where(valid, flat, kf.shape[0]).reshape(-1)     # OOB rows drop
+    kf = kf.at[idx].set(k_new.reshape(-1, KV, D), mode="drop")
+    vf = vf.at[idx].set(v_new.reshape(-1, KV, D), mode="drop")
+    k_pool2 = kf.reshape(k_pool.shape)
+    v_pool2 = vf.reshape(v_pool.shape)
+
+    k = k_pool2[block_tables].reshape(B, nb * bs, KV, D)
+    v = v_pool2[block_tables].reshape(B, nb * bs, KV, D)
+    s = jnp.einsum("bckgd,bskd->bckgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    j = jnp.arange(nb * bs)
+    causal = j[None, None, :] <= (pos[:, :, None])            # key <= q pos
+    s = jnp.where(causal[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bckgs,bskd->bckgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype), k_pool2, v_pool2
+
+
+def prefill_flops_bytes(B, C, KV, G, D, q_start, dtype_bytes: int = 2) -> dict:
+    """Per chunk: every query row attends its causal prefix; traffic = the
+    committed chunk write plus the live K+V reads up to each row."""
+    live = float(sum(int(s) * C + C * (C + 1) / 2 for s in q_start))
+    flops = 4.0 * KV * G * D * live
+    bytes_ = 2.0 * KV * D * dtype_bytes * (live + B * C)
+    return {"flops": flops, "bytes": bytes_,
+            "ai": flops / bytes_ if bytes_ else 0}
+
+
 def flops_bytes(B, KV, G, D, valid_len, dtype_bytes: int = 2) -> dict:
     """Per decode step: 2*2*H*D flops per live cache token; traffic = live
     K+V reads (the q/output traffic is negligible)."""

@@ -391,6 +391,38 @@ def _qc_workload() -> Workload:
     )
 
 
+def _flash_prefill_workload() -> Workload:
+    import jax.numpy as jnp
+    import numpy as np
+
+    B, C, KV, G, D = 2, 16, 2, 4, 16
+    bs, nb = 8, 8  # 64-token view per slot
+    q_start = (24, 0)
+    fb = _fd_r.prefill_flops_bytes(B, C, KV, G, D, q_start, dtype_bytes=4)
+
+    def args():
+        n_blocks = 1 + B * nb
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, C, KV, G, D), jnp.float32)
+        kn = jax.random.normal(ks[1], (B, C, KV, D), jnp.float32)
+        vn = jax.random.normal(ks[2], (B, C, KV, D), jnp.float32)
+        kp = jax.random.normal(ks[3], (n_blocks, bs, KV, D), jnp.float32)
+        vp = jax.random.normal(ks[4], (n_blocks, bs, KV, D), jnp.float32)
+        bt = 1 + np.arange(B * nb, dtype=np.int32).reshape(B, nb)
+        return (q, kn, vn, kp, vp, jnp.asarray(bt),
+                jnp.asarray(q_start, jnp.int32))
+
+    def one_chunk(q, kn, vn, kp, vp, bt, qs):
+        return FLASH_PREFILL(q, kn, vn, kp, vp, bt, qs, block_c=8)[0]
+
+    return Workload(
+        name="kernel/flash-prefill", fn=one_chunk, args=args, dtype="fp32",
+        flops=fb["flops"], hbm_bytes=fb["bytes"],
+        problem=f"B{B} C{C} KV{KV} G{G} D{D} bs{bs}", tags=("kernel",),
+        notes="chunked causal prefill committing K/V into paged blocks",
+    )
+
+
 def _flash_decode_workload() -> Workload:
     import jax.numpy as jnp
 
@@ -483,4 +515,12 @@ FLASH_DECODE = register_kernel(
     static_argnames=("block_s",),
     workload=_flash_decode_workload,
     tuning_space=_spaces.flash_decode_space(),
+)
+
+FLASH_PREFILL = register_kernel(
+    "flash-prefill", _fd_k.flash_prefill_paged,
+    ref=_fd_r.prefill_paged_ref,
+    static_argnames=("block_c", "block_s"),
+    workload=_flash_prefill_workload,
+    tuning_space=_spaces.flash_prefill_space(),
 )

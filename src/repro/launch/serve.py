@@ -6,7 +6,11 @@ Usage:
 
 ``--scheduler wave`` runs the legacy lockstep scheduler (the golden
 baseline); the default continuous scheduler refills slots mid-flight over
-the paged KV cache.  ``--record`` appends the serving metrics (tok/s,
+the paged KV cache.  ``--prefill-chunk N`` commits up to N prompt tokens
+per fused step (chunked prefill) and ``--prefill-budget`` caps the total
+prefill tokens admitted per step so decode never stalls behind a long
+prompt — both land in the report and the ledger key, so chunked and
+token-by-token trajectories stay separate.  ``--record`` appends the serving metrics (tok/s,
 p50/p95 request latency, slot utilization) to the perf trajectory ledger,
 where ``python -m repro.perf report`` renders them; ``--out`` writes the
 full machine-readable serve report.
@@ -35,6 +39,8 @@ def build_report(args: argparse.Namespace, engine: ServeEngine,
         "max_batch": engine.max_batch,
         "max_len": engine.max_len,
         "block_size": engine.block_size,
+        "prefill_chunk": engine.prefill_chunk,
+        "prefill_budget": engine.prefill_budget,
         "rejected": len(rejections),
         "rejections": [{"uid": u, "reason": reason} for u, reason in rejections],
         "stats": engine.stats(),
@@ -43,7 +49,9 @@ def build_report(args: argparse.Namespace, engine: ServeEngine,
                 "uid": r.uid,
                 "prompt_len": int(len(r.prompt)),
                 "new_tokens": len(r.generated),
+                "tokens": [int(t) for t in r.generated],
                 "latency_s": r.latency_s,
+                "ttft_s": r.ttft_s,
             }
             for _, r in sorted(engine.completed.items())
         ],
@@ -63,6 +71,20 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prompt-lo", type=int, default=4,
+                    help="minimum sampled prompt length")
+    ap.add_argument("--prompt-hi", type=int, default=16,
+                    help="maximum sampled prompt length (inclusive)")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="commit up to N prompt tokens per fused step "
+                         "(1 = token-by-token; continuous scheduler only)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="cap total prefill tokens admitted per step so "
+                         "decode slots never stall behind long prompts")
+    ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="compile the fused step before serving so TTFT "
+                         "measures scheduling, not XLA compilation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write the serve report JSON here")
@@ -75,12 +97,16 @@ def main(argv=None) -> int:
     params = steps_mod.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.max_len, scheduler=args.scheduler,
-                         block_size=args.block_size)
+                         block_size=args.block_size,
+                         prefill_chunk=args.prefill_chunk,
+                         prefill_budget=args.prefill_budget)
+    if args.warmup:
+        engine.warmup()
 
     rng = np.random.default_rng(args.seed)
     rejections: list = []
     for uid in range(args.requests):
-        plen = int(rng.integers(4, 17))
+        plen = int(rng.integers(args.prompt_lo, args.prompt_hi + 1))
         try:
             engine.submit(Request(
                 uid=uid,
@@ -99,7 +125,13 @@ def main(argv=None) -> int:
     print(f"  slot utilization {stats['slot_utilization']:.3f} "
           f"({stats['busy_slot_steps']}/{stats['slot_steps']} slot-steps), "
           f"latency p50 {stats['p50_latency_s']:.3f}s "
-          f"p95 {stats['p95_latency_s']:.3f}s")
+          f"p95 {stats['p95_latency_s']:.3f}s, "
+          f"ttft p50 {stats['ttft_p50_s']:.3f}s "
+          f"p95 {stats['ttft_p95_s']:.3f}s"
+          + (f" [prefill chunk {engine.prefill_chunk}"
+             + (f", budget {engine.prefill_budget}"
+                if engine.prefill_budget else "") + "]"
+             if engine.prefill_chunk > 1 else ""))
     if rejections:
         print(f"  rejected {len(rejections)} oversized request(s) at submit:")
         for uid, reason in rejections:

@@ -509,6 +509,105 @@ def reset_paged_slots(cache: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
     return new
 
 
+def _commit_paged_masked(pool, delta, flat_idx, key: str, stacked: bool,
+                         active: jax.Array):
+    """Commit one token's delta, predicated per slot on ``active`` (B,).
+
+    Sequence pools need no extra masking — the caller already routes
+    inactive slots' ``flat_idx`` into NULL_BLOCK — but SSM/conv states are
+    full replacements, so inactive slots keep their previous state
+    bitwise.  ``where`` with an all-true mask is a bitwise identity, which
+    is what keeps the decode path's numerics untouched by this refactor.
+    """
+    if key in _SEQ_CACHE_KEYS:
+        return _commit_paged(pool, delta, flat_idx, key, stacked)
+    new = delta.astype(pool.dtype)
+    lead = (1,) if stacked else ()
+    m = active.reshape(lead + (active.shape[0],) + (1,) * (pool.ndim - len(lead) - 1))
+    return jnp.where(m, new, pool)
+
+
+def _paged_token_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+    positions: jax.Array,
+    block_tables: jax.Array,
+    active: jax.Array,
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """The shared one-token cell of the paged serve path.
+
+    Every per-slot op here (embed row, norms, per-slot attention over the
+    gathered view, per-token MoE routing, SSM recurrence) is independent
+    across batch rows, so a token's numerics depend only on its own slot's
+    inputs — the invariant that makes chunked prefill bit-exact against
+    token-by-token decode.  ``active`` (B,) predicates commits: inactive
+    slots scatter their sequence writes into NULL_BLOCK and keep their
+    recurrent state, exactly like idle slots always have.
+    """
+    pos_b = positions.astype(jnp.int32)
+    nb = block_tables.shape[1]
+    blk = jnp.take_along_axis(
+        block_tables, jnp.minimum(pos_b // block_size, nb - 1)[:, None], axis=1
+    )[:, 0]
+    flat_idx = jnp.where(
+        active, blk * block_size + pos_b % block_size,
+        NULL_BLOCK * block_size,
+    )  # (B,) pool token index
+    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+
+    def _view(c_slot):
+        """Gather logical per-slot views of this layer's sequence pools."""
+        return {
+            k: _gather_paged(leaf, block_tables) if k in _SEQ_CACHE_KEYS else leaf
+            for k, leaf in c_slot.items()
+        }
+
+    new_cache: Dict[str, Any] = {"blocks": None}
+    if "first_block" in params:
+        x, fb_delta = _apply_slot_decode(
+            params["first_block"], cfg, LayerKind.ATTN, False, x,
+            _view(cache["first_block"]), pos_b,
+        )
+        new_cache["first_block"] = {
+            k: _commit_paged_masked(cache["first_block"][k], d, flat_idx, k,
+                                    False, active)
+            for k, d in fb_delta.items()
+        }
+
+    def scan_body(x, inp):
+        p_blk, c_blk = inp
+        deltas = {}
+        for i, kind in enumerate(cfg.superblock):
+            x, delta = _apply_slot_decode(
+                p_blk[f"slot{i}"], cfg, kind, _slot_is_moe(cfg, i), x,
+                _view(c_blk[f"slot{i}"]), pos_b,
+            )
+            deltas[f"slot{i}"] = delta
+        return x, deltas
+
+    x, deltas = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = {
+        slot: {
+            k: _commit_paged_masked(cache["blocks"][slot][k], d, flat_idx, k,
+                                    True, active)
+            for k, d in slot_deltas.items()
+        }
+        for slot, slot_deltas in deltas.items()
+    }
+
+    _, norm_fn = layers.make_norm(cfg)
+    x = norm_fn(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.dense(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache
+
+
 def decode_step_paged(
     params,
     cfg: ModelConfig,
@@ -529,60 +628,56 @@ def decode_step_paged(
     out rather than synchronized on.  Scheduling state (positions, tables,
     allocator) lives with the caller; the cache holds only device pools.
     """
-    pos_b = positions.astype(jnp.int32)
-    blk = jnp.take_along_axis(
-        block_tables, (pos_b // block_size)[:, None], axis=1
-    )[:, 0]
-    flat_idx = blk * block_size + pos_b % block_size  # (B,) pool token index
-    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    active = jnp.ones((tokens.shape[0],), jnp.bool_)
+    return _paged_token_step(
+        params, cfg, tokens, cache, positions, block_tables, active,
+        block_size=block_size,
+    )
 
-    def _view(c_slot):
-        """Gather logical per-slot views of this layer's sequence pools."""
-        return {
-            k: _gather_paged(leaf, block_tables) if k in _SEQ_CACHE_KEYS else leaf
-            for k, leaf in c_slot.items()
-        }
 
-    new_cache: Dict[str, Any] = {"blocks": None}
-    if "first_block" in params:
-        x, fb_delta = _apply_slot_decode(
-            params["first_block"], cfg, LayerKind.ATTN, False, x,
-            _view(cache["first_block"]), pos_b,
+def prefill_step_paged(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    cache: Dict[str, Any],
+    positions: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    *,
+    block_size: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Commit a chunk of C prompt tokens per slot in ONE fused call.
+
+    tokens: (B, C) — slot ``b``'s next ``lengths[b]`` known tokens (prompt
+    or replayed), zero-padded past its length; positions: (B,) per-slot
+    cache lengths before the chunk; lengths: (B,) int32 in [0, C].  The
+    chunk is a ``lax.scan`` of the SAME per-token cell the decode path
+    runs, with slot ``b`` active for the first ``lengths[b]`` iterations —
+    so a P-token prompt costs ceil(P/C) fused calls instead of P while
+    producing bit-identical logits, sequence pools, and SSM states (dense
+    SSM states advance by in-chunk recurrence, never the parallel chunk
+    scan, precisely because SSD's chunked accumulation order differs
+    bitwise).  Returns (logits (B, C, vocab_padded) fp32 — iteration ``c``'s
+    row for every slot; callers read row ``lengths[b]-1`` — and the updated
+    cache).  Slots with ``lengths[b] == 0`` commit nothing and keep their
+    state; their logit rows are garbage by contract.
+    """
+    B, C = tokens.shape
+    pos0 = positions.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def body(cache, xs):
+        tok_c, c = xs
+        logits, cache = _paged_token_step(
+            params, cfg, tok_c[:, None], cache, pos0 + c, block_tables,
+            c < lens, block_size=block_size,
         )
-        new_cache["first_block"] = {
-            k: _commit_paged(cache["first_block"][k], d, flat_idx, k,
-                             stacked=False)
-            for k, d in fb_delta.items()
-        }
+        return cache, logits[:, 0]
 
-    def scan_body(x, inp):
-        p_blk, c_blk = inp
-        deltas = {}
-        for i, kind in enumerate(cfg.superblock):
-            x, delta = _apply_slot_decode(
-                p_blk[f"slot{i}"], cfg, kind, _slot_is_moe(cfg, i), x,
-                _view(c_blk[f"slot{i}"]), pos_b,
-            )
-            deltas[f"slot{i}"] = delta
-        return x, deltas
-
-    x, deltas = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
-    new_cache["blocks"] = {
-        slot: {
-            k: _commit_paged(cache["blocks"][slot][k], d, flat_idx, k,
-                             stacked=True)
-            for k, d in slot_deltas.items()
-        }
-        for slot, slot_deltas in deltas.items()
-    }
-
-    _, norm_fn = layers.make_norm(cfg)
-    x = norm_fn(params["final_norm"], x)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], x)
-    else:
-        logits = layers.dense(params["lm_head"], x).astype(jnp.float32)
-    return logits, new_cache
+    cache, logits = jax.lax.scan(
+        body, cache, (tokens.T, jnp.arange(C, dtype=jnp.int32))
+    )
+    return jnp.transpose(logits, (1, 0, 2)), cache
 
 
 def prefill(

@@ -63,6 +63,12 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("p95_latency_s", "higher", 0.20, noisy=True),
         MetricSpec("ttft_p50_s", "higher", 0.15, noisy=True),
         MetricSpec("ttft_p95_s", "higher", 0.20, noisy=True),
+        # step-clock TTFT (chunked prefill): a pure function of the seeded
+        # request trace + scheduler config, so ANY growth regresses — this
+        # is the tight signal; the wall TTFTs above absorb machine noise
+        MetricSpec("ttft_p50_steps", "higher", 0.0),
+        MetricSpec("ttft_p95_steps", "higher", 0.0),
+        MetricSpec("prefill_chunk", "lower", 0.0),
         MetricSpec("slot_utilization", "lower", 0.02),
         MetricSpec("fused_steps", "higher", 0.0),
         MetricSpec("requests", "lower", 0.0),

@@ -289,14 +289,15 @@ _SERVING_METRICS = (
     "requests", "new_tokens", "fused_steps", "busy_slot_steps",
     "slot_steps", "slot_utilization", "tok_s",
     "p50_latency_s", "p95_latency_s", "ttft_p50_s", "ttft_p95_s",
-    "preemptions", "rejected", "restarts",
+    "ttft_p50_steps", "ttft_p95_steps",
+    "preemptions", "rejected", "restarts", "prefill_chunk",
 )
 
 #: _SERVING_METRICS names that are exact counters (held tight by the gate);
 #: the rest are wall-derived floats with noisy tolerances.
 _SERVING_INT_METRICS = frozenset((
     "requests", "new_tokens", "fused_steps", "busy_slot_steps",
-    "slot_steps", "preemptions", "rejected", "restarts",
+    "slot_steps", "preemptions", "rejected", "restarts", "prefill_chunk",
 ))
 
 
@@ -313,10 +314,17 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
     """One metric row per serve run from a ``serve_report`` payload
     (:func:`repro.launch.serve.build_report`), keyed
     ``serve/<arch>@<scheduler>`` so wave and continuous trajectories never
-    get conflated."""
+    get conflated.  Chunked-prefill runs (``prefill_chunk > 1``) append a
+    ``+prefill<C>`` segment — the chunked and token-by-token trajectories
+    are different experiments (fewer fused steps, different TTFT), so the
+    gate must never compare one against the other's baseline."""
     stats = report.get("stats") or {}
+    chunk = int(report.get("prefill_chunk",
+                           stats.get("prefill_chunk", 1)) or 1)
     key = (f"serve/{report.get('arch', '?')}"
            f"@{report.get('scheduler', stats.get('scheduler', '?'))}")
+    if chunk > 1:
+        key += f"+prefill{chunk}"
     row = _serving_row(stats)
     # submit-time rejections live on the report, not in engine stats: the
     # engine never saw those requests (launch.serve counts them)

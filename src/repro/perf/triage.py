@@ -36,6 +36,19 @@ from repro.perf.ledger import BenchRun
 _COUNTER_METRICS = (
     "ai", "r_ins", "flops", "hbm_bytes", "gather_bytes",
     "vectorizable_fraction", "perf_class", "predicted_speedup", "rows",
+) + (
+    # serving scheduler counters: pure functions of the seeded request
+    # trace + scheduler config, so their movement is a behavior change
+    "fused_steps", "busy_slot_steps", "slot_steps", "slot_utilization",
+    "ttft_p50_steps", "ttft_p95_steps", "prefill_chunk",
+    "preemptions", "rejected", "restarts", "requests", "new_tokens",
+)
+
+#: The subset that the continuous scheduler's admission/chunking/budget
+#: policy controls directly — regressions here get a scheduling suspect.
+_SCHED_METRICS = (
+    "fused_steps", "busy_slot_steps", "slot_steps",
+    "ttft_p50_steps", "ttft_p95_steps", "prefill_chunk",
 )
 
 
@@ -186,6 +199,13 @@ def _suspects(
     if (isinstance(hbm_b, (int, float)) and isinstance(hbm_a, (int, float))
             and hbm_b > 0 and hbm_a > hbm_b * 1.02):
         out.append(f"HBM traffic grew {hbm_a / hbm_b:.3g}x")
+    sched = sorted({r.metric for r in regressed if r.metric in _SCHED_METRICS})
+    if sched:
+        out.append(
+            "deterministic scheduler counters moved ("
+            + ", ".join(sched)
+            + "): admission/chunking/budget policy changed, not machine noise"
+        )
     if not any(r.metric in _COUNTER_METRICS for r in regressed):
         out.append(
             "wall-time regression with unchanged counters: suspect machine "

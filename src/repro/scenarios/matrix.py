@@ -131,6 +131,11 @@ class SLOSpec:
     max_p95_latency_s: float = 120.0
     max_ttft_p95_s: float = 120.0
     min_slot_utilization: float = 0.05
+    #: optional ceiling on the DETERMINISTIC step-clock TTFT (fused steps
+    #: from submit to first token): same trace => same value on any
+    #: machine, so it can be pinned tight where wall ceilings stay loose.
+    #: None disables the check (the default: it is a per-matrix contract).
+    max_ttft_p95_steps: Optional[float] = None
 
     def check(self, stats: Mapping[str, Any]) -> List[str]:
         """Violation strings (empty = SLOs met)."""
@@ -142,6 +147,9 @@ class SLOSpec:
             ("slot_utilization", self.min_slot_utilization, "floor",
              "slot utilization"),
         )
+        if self.max_ttft_p95_steps is not None:
+            checks += (("ttft_p95_steps", self.max_ttft_p95_steps,
+                        "ceiling", "p95 TTFT steps"),)
         for name, bound, kind, label in checks:
             val = stats.get(name)
             if val is None:
@@ -175,11 +183,14 @@ class Scenario:
     block_size: int
     seed: int  # derived: see cell_seed()
     slo: SLOSpec = SLOSpec()
+    prefill_chunk: int = 1
+    prefill_budget: Optional[int] = None
 
     @property
     def traffic_key(self) -> str:
-        """Axes the sampled traffic depends on.  Scheduler and fault are
-        EXCLUDED so twins and cross-scheduler cells share a trace."""
+        """Axes the sampled traffic depends on.  Scheduler, fault, and the
+        prefill-chunking axis are EXCLUDED so twins, cross-scheduler cells,
+        and chunked-vs-token-by-token cells all share a trace."""
         return "/".join((
             self.arrival.slug, self.prompt.slug, self.eos.slug, self.arch,
             f"n{self.requests}", f"new{self.max_new}",
@@ -187,10 +198,13 @@ class Scenario:
 
     @property
     def cell_id(self) -> str:
-        return "/".join((
+        parts = [
             self.arrival.slug, self.prompt.slug, self.eos.slug,
             self.scheduler, self.arch, self.fault,
-        ))
+        ]
+        if self.prefill_chunk > 1:
+            parts.append(f"pc{self.prefill_chunk}")
+        return "/".join(parts)
 
     @property
     def ledger_key(self) -> str:
@@ -202,6 +216,13 @@ class Scenario:
         Shares the seed (fault is outside the traffic key), so both cells
         sample byte-identical traffic."""
         return dataclasses.replace(self, fault="none")
+
+    def chunk_twin(self) -> "Scenario":
+        """The token-by-token golden twin of a chunked-prefill cell: same
+        traffic (the chunk axis is outside the traffic key), fault-free,
+        ``prefill_chunk=1``.  Chunked serving must match it uid-for-uid."""
+        return dataclasses.replace(self, fault="none", prefill_chunk=1,
+                                   prefill_budget=None)
 
 
 def cell_seed(spec_seed: int, traffic_key: str) -> int:
@@ -231,6 +252,11 @@ class MatrixSpec:
         default_factory=lambda: ["gpt2-124m"])
     faults: List[str] = dataclasses.field(
         default_factory=lambda: ["none"])
+    #: prefill-chunking axis: 1 = token-by-token, >1 = chunked prefill
+    #: (continuous scheduler only; wave combos are skipped)
+    prefill_chunks: List[int] = dataclasses.field(
+        default_factory=lambda: [1])
+    prefill_budget: Optional[int] = None
     requests: int = 6
     max_new: int = 8
     max_batch: int = 2
@@ -252,22 +278,31 @@ class MatrixSpec:
                     for pr in self.prompts:
                         for eo in self.eos:
                             for fault in self.faults:
-                                cell = Scenario(
-                                    arrival=arr, prompt=pr, eos=eo,
-                                    scheduler=sched, arch=arch, fault=fault,
-                                    requests=self.requests,
-                                    max_new=self.max_new,
-                                    max_batch=self.max_batch,
-                                    max_len=self.max_len,
-                                    block_size=self.block_size,
-                                    seed=0, slo=self.slo,
-                                )
-                                if not get_plan(fault).applies_to(cell):
-                                    continue
-                                out.append(dataclasses.replace(
-                                    cell,
-                                    seed=cell_seed(self.seed, cell.traffic_key),
-                                ))
+                                for pc in self.prefill_chunks:
+                                    if pc > 1 and sched != "continuous":
+                                        continue  # wave has no chunked path
+                                    cell = Scenario(
+                                        arrival=arr, prompt=pr, eos=eo,
+                                        scheduler=sched, arch=arch,
+                                        fault=fault,
+                                        requests=self.requests,
+                                        max_new=self.max_new,
+                                        max_batch=self.max_batch,
+                                        max_len=self.max_len,
+                                        block_size=self.block_size,
+                                        seed=0, slo=self.slo,
+                                        prefill_chunk=pc,
+                                        prefill_budget=(
+                                            self.prefill_budget
+                                            if pc > 1 else None),
+                                    )
+                                    if not get_plan(fault).applies_to(cell):
+                                        continue
+                                    out.append(dataclasses.replace(
+                                        cell,
+                                        seed=cell_seed(self.seed,
+                                                       cell.traffic_key),
+                                    ))
         return out
 
     # -- JSON round-trip (spec files for the CLI) ---------------------------

@@ -124,6 +124,8 @@ def _execute_engine(cell: Scenario, cfg, params,
     engine = ServeEngine(
         cfg, params, max_batch=cell.max_batch, max_len=cell.max_len,
         scheduler=cell.scheduler, block_size=cell.block_size,
+        prefill_chunk=cell.prefill_chunk,
+        prefill_budget=cell.prefill_budget,
     )
     feeder = TrafficFeeder(trace)
     engine.add_step_hook(feeder)
@@ -181,6 +183,8 @@ def _execute_resilient(cell: Scenario, cfg, params,
         engine = ServeEngine(
             cfg, params, max_batch=cell.max_batch, max_len=cell.max_len,
             scheduler=cell.scheduler, block_size=cell.block_size,
+            prefill_chunk=cell.prefill_chunk,
+            prefill_budget=cell.prefill_budget,
         )
         feeder = TrafficFeeder(rebased)
         engine.add_step_hook(feeder)
@@ -189,7 +193,7 @@ def _execute_resilient(cell: Scenario, cfg, params,
         engine.run_until_drained()
         tokens = np.array(state["tokens"])
         served = np.array(state["served"])
-        lats, ttfts = [], []
+        lats, ttfts, ttft_steps = [], [], []
         for uid, r in engine.completed.items():
             row = uid_row[uid]
             tokens[row, : len(r.generated)] = r.generated
@@ -198,8 +202,10 @@ def _execute_resilient(cell: Scenario, cfg, params,
                 lats.append(r.latency_s)
             if r.ttft_s is not None:
                 ttfts.append(r.ttft_s)
-        chunk_obs[chunk_idx] = {"stats": engine.stats(),
-                                "lats": lats, "ttfts": ttfts}
+            if r.ttft_steps is not None:
+                ttft_steps.append(r.ttft_steps)
+        chunk_obs[chunk_idx] = {"stats": engine.stats(), "lats": lats,
+                                "ttfts": ttfts, "ttft_steps": ttft_steps}
         rejected[chunk_idx] = feeder.rejected
         return {"tokens": tokens, "served": served}
 
@@ -229,9 +235,11 @@ def _execute_resilient(cell: Scenario, cfg, params,
         "slot_steps", "preemptions", "wall_s")}
     lats = [v for o in obs for v in o["lats"]]
     ttfts = [v for o in obs for v in o["ttfts"]]
+    ttft_steps = [float(v) for o in obs for v in o["ttft_steps"]]
     rej = [r for i in sorted(rejected) for r in rejected[i]]
     stats = {
         "scheduler": cell.scheduler,
+        "prefill_chunk": cell.prefill_chunk,
         **{k: totals[k] for k in ("requests", "new_tokens", "fused_steps",
                                   "busy_slot_steps", "slot_steps",
                                   "preemptions")},
@@ -244,6 +252,8 @@ def _execute_resilient(cell: Scenario, cfg, params,
         "p95_latency_s": _percentile(lats, 95),
         "ttft_p50_s": _percentile(ttfts, 50),
         "ttft_p95_s": _percentile(ttfts, 95),
+        "ttft_p50_steps": _percentile(ttft_steps, 50),
+        "ttft_p95_steps": _percentile(ttft_steps, 95),
         "rejected": len(rej),
         "restarts": int(out["restarts"]),
     }
@@ -298,6 +308,8 @@ class CellResult:
             "arch": self.cell.arch,
             "scheduler": self.cell.scheduler,
             "fault": self.cell.fault,
+            "prefill_chunk": self.cell.prefill_chunk,
+            "prefill_budget": self.cell.prefill_budget,
             "seed": self.cell.seed,
             "ok": self.ok,
             "stats": self.stats,
@@ -351,6 +363,19 @@ def run_cell(cell: Scenario, *, check_twin: bool = True) -> CellResult:
             return result
         result.golden_checked = True
         result.golden_diffs = _diff_tokens(result.tokens, twin.tokens)
+    if cell.prefill_chunk > 1 and check_twin:
+        # the chunk axis gets the same golden treatment as faults: chunked
+        # serving must reproduce the token-by-token streams exactly
+        try:
+            ctwin = _execute(cell.chunk_twin(), inject=False)
+        except Exception as e:  # noqa: BLE001
+            result.error = f"chunk twin failed: {type(e).__name__}: {e}"
+            return result
+        result.golden_checked = True
+        result.golden_diffs += [
+            f"[vs prefill_chunk=1] {d}"
+            for d in _diff_tokens(result.tokens, ctwin.tokens)
+        ]
     result.slo_failures = cell.slo.check(result.stats)
     return result
 

@@ -20,6 +20,17 @@ Scheduling state — positions, block tables, the free list — is host-side
 numpy ("slot accounting"); only the pools live on device, and the fused
 step is compiled exactly once per engine.
 
+``prefill_chunk > 1`` turns on prefill/decode disaggregation: prompts are
+committed up to ``prefill_chunk`` tokens per fused
+:func:`~repro.models.transformer.prefill_step_paged` call (a scan over
+the same per-token cell as decode, so served streams stay bit-identical)
+while in-flight decode slots keep advancing one token per step in the
+SAME fused call.  ``prefill_budget`` caps the total prefill tokens
+admitted per step — decode tokens are never counted against it — so a
+long prompt cannot starve decode latency; time-to-first-token
+(``ttft_p50_s``/``ttft_p95_s``) is the metric this trades against raw
+step count.
+
 ``scheduler="wave"`` keeps the legacy lockstep behavior (admit a wave,
 run every slot to the wave's horizon) as the golden-equivalence baseline:
 both schedulers feed identical per-request token sequences, so greedy
@@ -65,6 +76,30 @@ StepHook = Callable[["ServeEngine", bool], bool]
 _MAX_IDLE_SPINS = 100_000
 
 
+def _bucket_width(m: int, cap: int) -> int:
+    """Smallest power-of-two >= m, clamped to cap (chunk-scan widths are
+    bucketed so each width traces once and partial chunks don't pay for
+    the full chunk's masked cells)."""
+    w = 1
+    while w < m:
+        w *= 2
+    return min(w, cap)
+
+
+def _dev(x: np.ndarray) -> jax.Array:
+    """Hand a scheduler array to the device WITHOUT aliasing it.
+
+    On the CPU backend ``jnp.asarray`` zero-copies a 64-byte-aligned
+    contiguous numpy buffer, so the device computation reads the host
+    memory directly — but the drain loops mutate these arrays in place
+    immediately after dispatch, and the fused step's cache-commit thunks
+    can still be reading them after the logits sync (XLA CPU completes
+    outputs independently).  A private copy makes the handoff immune:
+    the device may alias the copy, which nothing ever mutates.
+    """
+    return jnp.asarray(np.array(x, copy=True))
+
+
 @functools.lru_cache(maxsize=None)
 def _jit_decode(cfg: ModelConfig):
     """One compiled dense decode step per ModelConfig (configs are frozen
@@ -77,6 +112,17 @@ def _jit_decode_paged(cfg: ModelConfig, block_size: int):
     return jax.jit(
         lambda p, t, c, pos, bt: transformer.decode_step_paged(
             p, cfg, t, c, pos, bt, block_size=block_size
+        )
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_paged(cfg: ModelConfig, block_size: int):
+    """Fused chunked-prefill step (chunk width is baked into the token
+    array's shape, so each (config, block_size, chunk) traces once)."""
+    return jax.jit(
+        lambda p, t, c, pos, bt, lens: transformer.prefill_step_paged(
+            p, cfg, t, c, pos, bt, lens, block_size=block_size
         )
     )
 
@@ -109,6 +155,11 @@ class Request:
         self.started_s: Optional[float] = None
         self.first_token_s: Optional[float] = None
         self.finished_s: Optional[float] = None
+        # step-clock twins of the wall-clock stamps: fused-step counter at
+        # submit and at first token — deterministic given the trace, so
+        # the perf gate can hold TTFT tight where wall time is noisy
+        self.submitted_step: Optional[int] = None
+        self.first_token_step: Optional[int] = None
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -126,11 +177,20 @@ class Request:
             return None
         return self.first_token_s - self.submitted_s
 
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        """Fused steps between submit and first generated token — the
+        deterministic TTFT (same trace => same value on any machine)."""
+        if self.submitted_step is None or self.first_token_step is None:
+            return None
+        return self.first_token_step - self.submitted_step
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, scheduler: str = "continuous",
-                 block_size: int = 16):
+                 block_size: int = 16, prefill_chunk: int = 1,
+                 prefill_budget: Optional[int] = None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
                              f"got {scheduler!r}")
@@ -138,12 +198,25 @@ class ServeEngine:
             # wave mode uses the dense cache and never touches the pool
             raise ValueError(f"max_len {max_len} must be a multiple of "
                              f"block_size {block_size}")
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefill_chunk > 1 and scheduler != "continuous":
+            raise ValueError(
+                "chunked prefill (prefill_chunk > 1) requires the "
+                "continuous scheduler; wave mode replays prompts densely"
+            )
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget must be >= 1 (or None), got {prefill_budget}"
+            )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.scheduler = scheduler
         self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
         self.queue: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
         # slot accounting (Eq. 1 analogue): fused steps are vector issues,
@@ -159,6 +232,7 @@ class ServeEngine:
         self.block_history: Dict[int, List[int]] = {}
         self._decode = _jit_decode(cfg)
         self._decode_paged = _jit_decode_paged(cfg, block_size)
+        self._prefill_paged = _jit_prefill_paged(cfg, block_size)
         self._reset_slots = _jit_reset_slots()
         self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
         # token-work budget for the drain-loop runaway guard: grows with
@@ -192,11 +266,55 @@ class ServeEngine:
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.uid}: empty prompt")
         req.submitted_s = time.time()
+        req.submitted_step = self.steps
         self._submitted_work += horizon
         self.queue.append(req)
 
     def add_step_hook(self, hook: StepHook) -> None:
         self.step_hooks.append(hook)
+
+    def warmup(self) -> None:
+        """Compile the engine's fused step before any traffic arrives.
+
+        One throwaway call on a dummy cache (all-null block tables: every
+        paged write lands in the reserved null block, and the cache is
+        discarded), so the jit trace is cached by shape when the drain
+        loop makes its first real call.  Without this, the first request's
+        TTFT measures XLA compilation, not scheduling — production servers
+        warm up for exactly this reason.  No-op on engine counters.
+        """
+        B = self.max_batch
+        if self.scheduler == "wave":
+            cache = transformer.init_cache(self.cfg, B, self.max_len)
+            out = self._decode(
+                self.params, jnp.zeros((B, 1), jnp.int32), cache
+            )
+            jax.block_until_ready(out[0])
+            return
+        cache = transformer.init_paged_cache(
+            self.cfg, B, self.max_len, self.block_size
+        )
+        pos = jnp.zeros((B,), jnp.int32)
+        bt = jnp.zeros((B, self.max_len // self.block_size), jnp.int32)
+        if self.prefill_chunk > 1:
+            # chunked engines dispatch the native decode step plus one
+            # scan trace per power-of-two bucket width — warm every width
+            # the drain can hit so no compile lands inside a request
+            w = 2
+            while True:
+                w = min(w, self.prefill_chunk)
+                out = self._prefill_paged(
+                    self.params, jnp.zeros((B, w), jnp.int32),
+                    cache, pos, bt, jnp.zeros((B,), jnp.int32),
+                )
+                jax.block_until_ready(out[0])
+                if w == self.prefill_chunk:
+                    break
+                w *= 2
+        out = self._decode_paged(
+            self.params, jnp.zeros((B, 1), jnp.int32), cache, pos, bt
+        )
+        jax.block_until_ready(out[0])
 
     def _call_hooks(self, busy: bool) -> bool:
         """Run every step hook; True while any may still deliver work."""
@@ -214,6 +332,7 @@ class ServeEngine:
     def _note_first_token(self, req: Request) -> None:
         if req.first_token_s is None:
             req.first_token_s = time.time()
+            req.first_token_step = self.steps  # the call that produced it
 
     def preempt(self, uid: Optional[int] = None) -> Optional[int]:
         """Evict one in-flight request from its slot (continuous only).
@@ -254,7 +373,7 @@ class ServeEngine:
                 free.appendleft(int(block_tables[b, j]))
         block_tables[b] = 0
         positions[b] = 0
-        live["tokens"][b, 0] = 0
+        live["tokens"][b, :] = 0
         slot_req[b] = None
         self.queue.appendleft(req)
         self.preemptions += 1
@@ -281,7 +400,7 @@ class ServeEngine:
         for t in range(horizon - 1):
             self._call_hooks(busy=True)  # arrivals land in the NEXT wave
             self.busy_slot_steps += sum(1 for r in wave if not r.done)
-            logits, cache = self._decode(self.params, jnp.asarray(tokens), cache)
+            logits, cache = self._decode(self.params, _dev(tokens), cache)
             self.steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
             for s, r in enumerate(wave):
@@ -386,15 +505,15 @@ class ServeEngine:
                             block_tables[b, j] = blk
                             self.block_history.setdefault(r.uid, []).append(blk)
                 if self._has_state and reset_mask.any():
-                    cache = self._reset_slots(cache, jnp.asarray(reset_mask))
+                    cache = self._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False
 
                 self.busy_slot_steps += sum(
                     1 for r in slot_req if r is not None
                 )
                 logits, cache = self._decode_paged(
-                    self.params, jnp.asarray(tokens), cache,
-                    jnp.asarray(positions), jnp.asarray(block_tables),
+                    self.params, _dev(tokens), cache,
+                    _dev(positions), _dev(block_tables),
                 )
                 self.steps += 1
                 nxt = np.asarray(
@@ -433,6 +552,172 @@ class ServeEngine:
         finally:
             self._live = None
 
+    # -- continuous scheduler, chunked prefill (prefill/decode disaggregation) -
+
+    def _drain_continuous_chunked(self, max_steps: Optional[int]) -> None:
+        """Continuous drain where prompts are committed ``prefill_chunk``
+        tokens per fused call instead of one.
+
+        Every busy slot feeds its *known* tokens (prompt, then any tokens
+        already generated — i.e. a preemption replay) in order: a slot at
+        position ``t0`` with ``n_rem`` known tokens left receives
+        ``n_b = min(chunk, n_rem)`` of them this step.  Decode slots
+        (``n_rem == 1``: the fed token is the newest generated one) always
+        advance and are never counted against ``prefill_budget``; prefill
+        slots share the budget in slot order and stall at ``n_b = 0`` when
+        it runs out — that is the disaggregation: decode latency no longer
+        queues behind a long prompt, because the prompt's chunks are
+        admitted under a per-step token budget alongside every decode
+        step.  A slot appends a new token only on the step that consumes
+        its last known token, from the logits row of that token; all other
+        rows are discarded.  The fused step is
+        :func:`~repro.models.transformer.prefill_step_paged`, a scan over
+        the same per-token cell as decode, so served streams are
+        bit-identical to the token-by-token scheduler.
+        """
+        B, bs, C = self.max_batch, self.block_size, self.prefill_chunk
+        nb_slot = self.max_len // bs
+        cache = transformer.init_paged_cache(self.cfg, B, self.max_len, bs)
+        positions = np.zeros(B, np.int32)
+        block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
+        free: Deque[int] = deque(range(1, 1 + B * nb_slot))
+        slot_req: List[Optional[Request]] = [None] * B
+        tokens = np.zeros((B, C), np.int32)
+        lengths = np.zeros(B, np.int32)
+        reset_mask = np.zeros(B, bool)
+        self._live = {
+            "positions": positions, "block_tables": block_tables,
+            "free": free, "slot_req": slot_req, "tokens": tokens,
+        }
+        idle_spins = 0
+
+        try:
+            while True:
+                pending = self._call_hooks(
+                    busy=any(r is not None for r in slot_req)
+                )
+                for b in range(B):
+                    if slot_req[b] is None and self.queue:
+                        r = self.queue.popleft()
+                        slot_req[b] = r
+                        if r.started_s is None:
+                            r.started_s = time.time()
+                        positions[b] = 0
+                        block_tables[b] = 0
+                        reset_mask[b] = True
+                if all(r is None for r in slot_req):
+                    if not pending:
+                        break
+                    idle_spins += 1  # hooks promise work; let them deliver
+                    if idle_spins > _MAX_IDLE_SPINS:
+                        raise RuntimeError(
+                            "step hooks report pending work but never submit"
+                        )
+                    continue
+                idle_spins = 0
+                # same exact occupancy bound as the token-by-token drain: a
+                # chunked step never advances a slot by less than one token
+                # unless budget-stalled, and at least one slot advances
+                budget = (max_steps if max_steps is not None
+                          else self._submitted_work + B)
+                if self.steps >= budget:
+                    raise RuntimeError("serve loop did not drain")
+                # admission: hand each slot its next known tokens under the
+                # per-step prefill budget, and map the blocks they land in
+                tokens[:] = 0
+                lengths[:] = 0
+                budget_left = (self.prefill_budget
+                               if self.prefill_budget is not None else B * C)
+                for b, r in enumerate(slot_req):
+                    if r is None:
+                        continue
+                    t0 = int(positions[b])
+                    known = len(r.prompt) + len(r.generated)
+                    n_rem = known - t0
+                    if n_rem <= 1:
+                        n_b = 1  # decode: always advances, never budgeted
+                    else:
+                        n_b = min(C, n_rem, budget_left)
+                        budget_left -= n_b
+                    if n_b <= 0:
+                        continue  # prefill stalled by budget this step
+                    for c in range(n_b):
+                        p = t0 + c
+                        tokens[b, c] = (
+                            r.prompt[p] if p < len(r.prompt)
+                            else r.generated[p - len(r.prompt)]
+                        )
+                    lengths[b] = n_b
+                    for j in range(t0 // bs, (t0 + n_b - 1) // bs + 1):
+                        if block_tables[b, j] == 0:
+                            blk = free.popleft()
+                            block_tables[b, j] = blk
+                            self.block_history.setdefault(
+                                r.uid, []
+                            ).append(blk)
+                if self._has_state and reset_mask.any():
+                    cache = self._reset_slots(cache, _dev(reset_mask))
+                reset_mask[:] = False
+
+                self.busy_slot_steps += int((lengths > 0).sum())
+                # disaggregated dispatch: a step with no prefill chunk in
+                # flight (every busy slot advances exactly 1 token) runs
+                # the native 1-wide decode step — decode never pays a
+                # chunk-wide scan; steps that DO carry prefill run the
+                # scan sliced to the smallest power-of-two bucket >= the
+                # widest chunk, so partial chunks don't burn masked cells.
+                # Both are bitwise safe: decode_step_paged is the C=1 cell
+                # of prefill_step_paged, a masked cell is identity on the
+                # cache, and a budget-stalled slot (lengths == 0 with
+                # mapped blocks) always takes the masked scan path so it
+                # is never fed a garbage token.
+                pure_decode = all(
+                    lengths[b] == 1 for b, r in enumerate(slot_req)
+                    if r is not None
+                )
+                if pure_decode:
+                    logits, cache = self._decode_paged(
+                        self.params, _dev(tokens[:, :1]), cache,
+                        _dev(positions), _dev(block_tables),
+                    )
+                else:
+                    w = _bucket_width(int(lengths.max()), C)
+                    logits, cache = self._prefill_paged(
+                        self.params, _dev(tokens[:, :w]), cache,
+                        _dev(positions), _dev(block_tables),
+                        _dev(lengths),
+                    )
+                self.steps += 1
+                # one transfer: argmax of each slot's LAST fed row (only
+                # slots that just consumed their final known token use it)
+                last = jnp.maximum(jnp.asarray(lengths) - 1, 0)
+                nxt = np.asarray(jnp.argmax(
+                    logits[jnp.arange(B), last, : self.cfg.vocab], axis=-1
+                ))
+                for b, r in enumerate(slot_req):
+                    if r is None or lengths[b] == 0:
+                        continue
+                    n_b = int(lengths[b])
+                    t0 = int(positions[b])
+                    positions[b] = t0 + n_b
+                    if t0 + n_b < len(r.prompt) + len(r.generated):
+                        continue  # still prefilling (or replaying)
+                    tok = int(nxt[b])
+                    self._note_first_token(r)
+                    r.generated.append(tok)
+                    if (len(r.generated) >= r.max_new_tokens
+                            or tok == r.eos_id):
+                        self._finish(r)
+                        for j in range(nb_slot):
+                            if block_tables[b, j] != 0:
+                                free.appendleft(int(block_tables[b, j]))
+                        block_tables[b] = 0
+                        positions[b] = 0
+                        tokens[b, :] = 0
+                        slot_req[b] = None
+        finally:
+            self._live = None
+
     # -- public ----------------------------------------------------------------
 
     def run_until_drained(
@@ -441,6 +726,8 @@ class ServeEngine:
         t0 = time.time()
         if self.scheduler == "wave":
             self._drain_waves(max_waves)
+        elif self.prefill_chunk > 1:
+            self._drain_continuous_chunked(max_steps)
         else:
             self._drain_continuous(max_steps)
         self.wall_s += time.time() - t0
@@ -457,9 +744,15 @@ class ServeEngine:
             r.ttft_s for r in self.completed.values()
             if r.ttft_s is not None
         )
+        ttft_steps = sorted(
+            r.ttft_steps for r in self.completed.values()
+            if r.ttft_steps is not None
+        )
         new_tokens = sum(len(r.generated) for r in self.completed.values())
         return {
             "scheduler": self.scheduler,
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_budget": self.prefill_budget,
             "requests": len(self.completed),
             "new_tokens": new_tokens,
             "fused_steps": self.steps,
@@ -473,4 +766,8 @@ class ServeEngine:
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
             "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
             "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft else 0.0,
+            "ttft_p50_steps": (float(np.percentile(ttft_steps, 50))
+                               if ttft_steps else 0.0),
+            "ttft_p95_steps": (float(np.percentile(ttft_steps, 95))
+                               if ttft_steps else 0.0),
         }

@@ -310,3 +310,88 @@ def flash_decode_space() -> TuningSpace:
         * args[0].shape[0] * args[0].shape[1] * args[0].shape[2]
         * args[0].shape[3] * args[1].shape[1],
     )
+
+
+# ---------------------------------------------------------------------------
+# Flash-prefill — chunk (query) tile x KV sub-tile over the paged pool
+# ---------------------------------------------------------------------------
+#
+# args convention = the kernel call: (q (B,C,KV,G,D), k_new, v_new,
+# k_pool (n_blocks,bs,KV,D), v_pool, block_tables (B,nb), q_start (B,)).
+
+
+def _fp_dims(args: Tuple) -> Tuple[int, int, int, int, int, int, int]:
+    q, k_pool, bt = args[0], args[3], args[5]
+    B, C, KV, G, D = q.shape
+    return B, C, KV, G, D, k_pool.shape[1], bt.shape[1]
+
+
+def _fp_clamp(cfg: Dict[str, Any], args: Tuple) -> Dict[str, Any]:
+    _, C, _, _, _, bs, _ = _fp_dims(args)
+    bks = min(cfg["block_s"], bs) if cfg["block_s"] else bs  # 0 = pool block
+    return {"block_c": min(cfg["block_c"], C), "block_s": bks}
+
+
+def _fp_ok(cfg: Dict[str, Any], args: Tuple) -> bool:
+    _, C, _, _, _, bs, _ = _fp_dims(args)
+    bc = min(cfg["block_c"], C)
+    bks = min(cfg["block_s"], bs) if cfg["block_s"] else bs
+    return C % bc == 0 and bs % bks == 0
+
+
+def _fp_vmem(cfg: Dict[str, Any], args: Tuple, dtype_bytes: int) -> float:
+    _, C, _, G, D, bs, _ = _fp_dims(args)
+    bc = min(cfg["block_c"], C)
+    bks = min(cfg["block_s"], bs) if cfg["block_s"] else bs
+    # q tile + k/v tiles + fp32 (m, l, acc) scratch + out tile
+    return float(
+        2 * bc * G * D * dtype_bytes
+        + 2 * bks * D * dtype_bytes
+        + bc * G * (D + 2) * 4
+    )
+
+
+def _fp_live(args: Tuple) -> float:
+    """Mean causal frontier per chunk row: context plus half the chunk."""
+    import numpy as np
+
+    _, C, _, _, _, _, _ = _fp_dims(args)
+    return float(np.mean(np.asarray(args[6]))) + (C + 1) / 2.0
+
+
+def _fp_traffic(cfg: Dict[str, Any], args: Tuple) -> float:
+    """Every query tile re-streams its causal KV prefix, so fewer/wider
+    chunk tiles mean fewer passes over the context — monotone in
+    ``block_c`` — while the chunk commit itself is written exactly once."""
+    B, C, KV, G, D, bs, _ = _fp_dims(args)
+    b = args[0].dtype.itemsize
+    bc = min(cfg["block_c"], C)
+    nq = C // bc
+    live = _fp_live(args)
+    return float(
+        2 * B * KV * nq * live * D * b      # K+V streamed per query tile
+        + 3 * B * C * KV * D * b            # chunk K/V read + committed
+        + 2 * B * C * KV * G * D * b        # q read + out written
+    )
+
+
+def _fp_flops(args: Tuple) -> float:
+    B, C, KV, G, D, _, _ = _fp_dims(args)
+    return 4.0 * KV * G * D * B * C * _fp_live(args)
+
+
+def flash_prefill_space() -> TuningSpace:
+    return TuningSpace(
+        kernel="flash-prefill",
+        axes={
+            "block_c": (64, 32, 16, 8, 4, 2, 1),
+            "block_s": (512, 256, 128, 64, 32, 16, 8),
+        },
+        default={"block_c": 8, "block_s": 0},  # 0 = one tile per pool block
+        dtypes=("fp32", "bf16"),
+        clamp=_fp_clamp,
+        constraint=_fp_ok,
+        vmem_model=_fp_vmem,
+        traffic_model=_fp_traffic,
+        flops_model=_fp_flops,
+    )

@@ -207,7 +207,8 @@ def test_clear_registry_recovers_builtins():
 
 def test_tag_filter_does_not_materialize_lazy_entries():
     kernels = list_workloads(tags=("kernel",))
-    assert len(kernels) == 6
+    assert len(kernels) == 7
+    assert "kernel/flash-prefill" in kernels
     assert all(k.startswith("kernel/") for k in kernels)
     apps = list_workloads(tags=("app",))
     assert len(apps) == 13

@@ -644,3 +644,99 @@ def test_gate_cli_exit_codes(tmp_path):
     payload = json.load(open(out))
     assert payload["ok"] is False
     assert payload["triage"][0]["class_transition"] is not None
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill serving trajectories (ISSUE-7)
+# ---------------------------------------------------------------------------
+
+
+def _chunked_serve_report(chunk=8, ttft_p95_steps=30.0, ttft_p50_steps=12.0,
+                          fused_steps=40):
+    rep = _serve_report(fused_steps=fused_steps)
+    rep["prefill_chunk"] = chunk
+    rep["prefill_budget"] = chunk
+    rep["stats"].update({
+        "prefill_chunk": chunk, "prefill_budget": chunk,
+        "ttft_p50_s": 0.1, "ttft_p95_s": 0.2,
+        "ttft_p50_steps": ttft_p50_steps,
+        "ttft_p95_steps": ttft_p95_steps,
+    })
+    return rep
+
+
+def test_metrics_from_serving_chunked_variant_key(tmp_path):
+    """prefill_chunk > 1 forks the trajectory key: the chunked and
+    token-by-token runs must never share a baseline."""
+    m = metrics_from_serving(_chunked_serve_report(chunk=8))
+    (key, row), = m.items()
+    assert key == "serve/gpt2-124m@continuous+prefill8"
+    assert row["prefill_chunk"] == 8 and isinstance(row["prefill_chunk"], int)
+    assert row["ttft_p95_steps"] == 30.0
+    # chunk 1 (or absent) keeps the legacy key byte-for-byte
+    plain = _serve_report()
+    assert set(metrics_from_serving(plain)) == {"serve/gpt2-124m@continuous"}
+    # both variants can land in one run as disjoint trajectories
+    run = Ledger(str(tmp_path)).record(
+        {**metrics_from_serving(plain),
+         **metrics_from_serving(_chunked_serve_report())}, env=ENV)
+    assert len(run.metrics) == 2
+
+
+def test_ttft_steps_regression_gates_exactly(tmp_path):
+    """The step-clock TTFT is deterministic given the trace, so ANY growth
+    on the chunked trajectory regresses — while the noisy wall TTFT needs
+    its 20% headroom."""
+    ledger = Ledger(str(tmp_path))
+    base = ledger.record(
+        metrics_from_serving(_chunked_serve_report(ttft_p95_steps=30.0)),
+        env=ENV)
+    worse = ledger.record(
+        metrics_from_serving(_chunked_serve_report(ttft_p95_steps=31.0)),
+        env=ENV)
+    cmp_ = compare_runs(base, worse)
+    key = "serve/gpt2-124m@continuous+prefill8"
+    assert (key, "ttft_p95_steps") in {
+        (r.key, r.metric) for r in cmp_.regressions}
+    assert not gate_run(worse, ledger, policy="latest").ok
+    # improvement direction never trips
+    better = ledger.record(
+        metrics_from_serving(_chunked_serve_report(ttft_p95_steps=29.0,
+                                                   fused_steps=39)),
+        env=ENV)
+    assert gate_run(better, ledger,
+                    policy="pinned:" + base.run_id[:10]).ok
+
+
+def test_ttft_regression_triages_to_scheduling_not_noise(tmp_path):
+    """Triage on a chunked-serve TTFT regression names the scheduler
+    counters as the suspect — never 'machine noise', which is the verdict
+    reserved for wall-only movement."""
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, metrics_from_serving(_chunked_serve_report()))
+    worse = _run(ledger, metrics_from_serving(
+        _chunked_serve_report(ttft_p95_steps=65.0, ttft_p50_steps=30.0,
+                              fused_steps=48)))
+    cmp_ = compare_runs(base, worse)
+    assert not cmp_.ok
+    (t,) = triage_regressions(cmp_, base, worse, tuning_store=None)
+    assert t.key == "serve/gpt2-124m@continuous+prefill8"
+    assert {"ttft_p95_steps", "ttft_p50_steps", "fused_steps"} <= set(
+        t.metrics)
+    assert any("admission/chunking/budget" in s for s in t.suspects)
+    assert not any("wall-time regression" in s for s in t.suspects)
+    assert "ttft_p95_steps" in t.narrative
+
+
+def test_prefill_chunk_drop_regresses(tmp_path):
+    """A run that silently serves with a narrower chunk than its baseline
+    (same trajectory key, e.g. a config override bug) regresses on the
+    exact prefill_chunk counter."""
+    ledger = Ledger(str(tmp_path))
+    base = _run(ledger, {"serve/gpt2-124m@continuous+prefill8": {
+        "prefill_chunk": 8, "fused_steps": 40}})
+    worse = _run(ledger, {"serve/gpt2-124m@continuous+prefill8": {
+        "prefill_chunk": 4, "fused_steps": 40}})
+    cmp_ = compare_runs(base, worse)
+    assert [(r.key, r.metric) for r in cmp_.regressions] == [
+        ("serve/gpt2-124m@continuous+prefill8", "prefill_chunk")]

@@ -331,6 +331,96 @@ def test_launch_serve_counts_rejections_instead_of_crashing(tmp_path):
     assert row["rejected"] == 3
 
 
+# ---------------------------------------------------------------------------
+# prefill-chunking axis
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_axis_expansion_and_shared_seed():
+    """The chunk axis expands only under the continuous scheduler, tags
+    cell ids with ``pc<C>``, and stays OUTSIDE the traffic key: every
+    chunk width samples byte-identical traffic."""
+    spec = _tiny_matrix(schedulers=["continuous", "wave"],
+                        prefill_chunks=[1, 8], prefill_budget=8)
+    cells = spec.cells()
+    cont = [c for c in cells if c.scheduler == "continuous"]
+    wave = [c for c in cells if c.scheduler == "wave"]
+    assert sorted(c.prefill_chunk for c in cont) == [1, 8]
+    assert [c.prefill_chunk for c in wave] == [1], "wave has no chunked path"
+    chunked, = [c for c in cont if c.prefill_chunk == 8]
+    plain, = [c for c in cont if c.prefill_chunk == 1]
+    assert chunked.cell_id.endswith("/pc8")
+    assert "pc" not in plain.cell_id
+    assert chunked.prefill_budget == 8 and plain.prefill_budget is None
+    assert len({c.seed for c in cells}) == 1, (
+        "prefill chunking must not perturb traffic seeds"
+    )
+    t_plain = sample_trace(plain, vocab=256)
+    t_chunk = sample_trace(chunked, vocab=256)
+    for a, b in zip(t_plain, t_chunk):
+        assert (a.uid, a.arrive_step, a.max_new_tokens) == (
+            b.uid, b.arrive_step, b.max_new_tokens)
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+
+
+def test_chunk_twin_is_token_by_token_and_fault_free():
+    spec = _tiny_matrix(faults=["preempt"], prefill_chunks=[8],
+                        prefill_budget=8)
+    cell, = spec.cells()
+    twin = cell.chunk_twin()
+    assert twin.prefill_chunk == 1 and twin.prefill_budget is None
+    assert twin.fault == "none"
+    assert twin.seed == cell.seed
+    assert "pc" not in twin.cell_id
+
+
+def test_chunked_preempt_cell_matches_both_twins():
+    """The hardest cell on the axis: chunked prefill + mid-flight
+    preemption must match the fault-free twin AND the token-by-token
+    chunk twin, uid-for-uid."""
+    spec = _tiny_matrix(faults=["preempt"], prefill_chunks=[8],
+                        prefill_budget=8)
+    cell, = spec.cells()
+    r = run_cell(cell)
+    assert r.error == ""
+    assert r.stats["preemptions"] >= 1
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["prefill_chunk"] == 8
+    rep = r.report()
+    assert rep["prefill_chunk"] == 8 and rep["prefill_budget"] == 8
+    metrics = metrics_from_scenario(rep)
+    (key, row), = metrics.items()
+    assert key.endswith("/pc8")
+    assert row["prefill_chunk"] == 8
+    assert row["ttft_p95_steps"] >= 1.0
+
+
+def test_slo_ttft_steps_ceiling():
+    """max_ttft_p95_steps is opt-in: None never checks (even when the
+    metric is absent), a finite ceiling gates the deterministic value."""
+    loose = SLOSpec()
+    assert loose.check({"tok_s": 9.0, "p95_latency_s": 0.1,
+                        "ttft_p95_s": 0.1, "slot_utilization": 0.9}) == []
+    tight = SLOSpec(max_ttft_p95_steps=4.0)
+    ok = {"tok_s": 9.0, "p95_latency_s": 0.1, "ttft_p95_s": 0.1,
+          "slot_utilization": 0.9, "ttft_p95_steps": 3.0}
+    assert tight.check(ok) == []
+    msgs = tight.check(dict(ok, ttft_p95_steps=9.0))
+    assert len(msgs) == 1 and "TTFT steps" in msgs[0]
+    cell = _cell("none", prefill_chunks=[8], prefill_budget=8,
+                 slo=SLOSpec(max_ttft_p95_steps=0.0))
+    r = run_cell(cell)
+    assert r.error == "" and r.slo_failures and not r.ok
+
+
+def test_smoke_matrix_unaffected_by_prefill_axis():
+    """The CI smoke matrix stays on the token-by-token path with the
+    exact same cell ids and seeds as before the axis existed."""
+    for c in smoke_matrix().cells():
+        assert c.prefill_chunk == 1 and c.prefill_budget is None
+        assert "pc" not in c.cell_id
+
+
 def test_cli_gate_fails_on_no_match():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.scenarios", "gate",

@@ -241,3 +241,179 @@ def test_max_waves_cap_is_exact(setup):
     eng = ServeEngine(cfg, params, max_batch=1, max_len=32, scheduler="wave")
     submit3(eng)
     assert len(eng.run_until_drained(max_waves=3)) == 3
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: budget disaggregation + preemption + typed failures
+# ---------------------------------------------------------------------------
+
+
+def _chunked_engine(cfg, params, *, chunk, budget=None, max_batch=2,
+                    max_len=64):
+    return ServeEngine(cfg, params, max_batch=max_batch, max_len=max_len,
+                       scheduler="continuous", block_size=8,
+                       prefill_chunk=chunk, prefill_budget=budget)
+
+
+def _trace_hook(trace):
+    """Step hook recording {uid: position} at the top of every iteration."""
+    def hook(engine, busy):
+        live = engine._live
+        trace.append({r.uid: int(live["positions"][b])
+                      for b, r in enumerate(live["slot_req"])
+                      if r is not None})
+        return False
+    return hook
+
+
+def test_prefill_budget_never_starves_decode(setup):
+    """Pinned trace: while a 40-token prompt prefills under an 8-token
+    budget, the already-decoding request advances by EXACTLY one token on
+    every fused step — decode latency no longer queues behind the prompt
+    (the disaggregation contract), and streams stay byte-identical."""
+    cfg, params = setup
+    rng = np.random.default_rng(21)
+    short = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    long = rng.integers(0, cfg.vocab, size=40).astype(np.int32)
+
+    def run(chunk, budget=None, hook=None):
+        eng = _chunked_engine(cfg, params, chunk=chunk, budget=budget)
+        if hook is not None:
+            eng.add_step_hook(hook)
+        eng.submit(Request(uid=0, prompt=short.copy(), max_new_tokens=10))
+        eng.submit(Request(uid=1, prompt=long.copy(), max_new_tokens=4))
+        eng.run_until_drained()
+        return eng
+
+    trace = []
+    chunked = run(8, budget=8, hook=_trace_hook(trace))
+    base = run(1)
+    for uid in (0, 1):
+        assert chunked.completed[uid].generated == \
+            base.completed[uid].generated, uid
+
+    # steps where the short request is decoding while the long one is
+    # still mid-prefill: the decoder must advance +1 on every one of them
+    overlap = 0
+    for prev, cur in zip(trace, trace[1:]):
+        if not (0 in prev and 1 in prev and 0 in cur and 1 in cur):
+            continue
+        if prev[0] >= len(short) and 0 < prev[1] < len(long):
+            assert cur[0] == prev[0] + 1, (prev, cur)
+            overlap += 1
+        if 0 < prev[1] < len(long):  # prompt admission capped by budget
+            assert cur[1] - prev[1] <= 8, (prev, cur)
+    assert overlap >= 3, trace  # the overlap actually happened
+
+    # budget held the long prompt back vs an unbudgeted chunked run, yet
+    # both serve identical streams
+    free_run = run(8)
+    for uid in (0, 1):
+        assert free_run.completed[uid].generated == \
+            base.completed[uid].generated, uid
+    assert free_run.completed[1].ttft_steps <= \
+        chunked.completed[1].ttft_steps
+
+
+def test_prefill_budget_one_crawls_but_stays_golden(setup):
+    """The degenerate budget=1 serializes prefill to one token per step
+    (token-by-token pacing) without perturbing a single served byte."""
+    cfg, params = setup
+    rng = np.random.default_rng(22)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (11, 6, 17)]
+
+    def run(chunk, budget=None):
+        eng = _chunked_engine(cfg, params, chunk=chunk, budget=budget)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=4))
+        eng.run_until_drained()
+        return eng
+
+    base, crawl = run(1), run(8, budget=1)
+    for uid in range(3):
+        assert crawl.completed[uid].generated == \
+            base.completed[uid].generated, uid
+    assert crawl.steps >= base.steps  # budget=1 cannot beat token-by-token
+
+
+def test_preempt_mid_prefill_replays_identically(setup):
+    """Evicting a request in the MIDDLE of its chunked prefill (blocks
+    freed, position reset) replays prompt + generated on re-admission and
+    serves a bit-identical stream."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 33)]
+
+    def run(chunk, preempt_mid_prefill=False):
+        eng = _chunked_engine(cfg, params, chunk=chunk, budget=8)
+        if preempt_mid_prefill:
+            fired = []
+
+            def hook(engine, busy):
+                live = engine._live
+                for b, r in enumerate(live["slot_req"]):
+                    if (not fired and r is not None and r.uid == 1
+                            and 0 < live["positions"][b] < 33):
+                        fired.append(engine.preempt(uid=1))
+                return False
+
+            eng.add_step_hook(hook)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=5))
+        eng.run_until_drained()
+        return eng
+
+    base = run(1)
+    faulted = run(8, preempt_mid_prefill=True)
+    assert faulted.preemptions == 1
+    for uid in (0, 1):
+        assert faulted.completed[uid].generated == \
+            base.completed[uid].generated, uid
+
+
+def test_ttft_steps_deterministic_across_runs(setup):
+    """The step-clock TTFT the ledger gates on is a pure function of the
+    trace: two identical runs agree exactly (wall-clock TTFT never can)."""
+    cfg, params = setup
+    rng = np.random.default_rng(24)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (30, 4, 30, 4)]
+
+    def run():
+        eng = _chunked_engine(cfg, params, chunk=8, budget=8)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(), max_new_tokens=3))
+        eng.run_until_drained()
+        return eng
+
+    a, b = run(), run()
+    ttft_a = [a.completed[u].ttft_steps for u in range(4)]
+    ttft_b = [b.completed[u].ttft_steps for u in range(4)]
+    assert ttft_a == ttft_b
+    assert all(t is not None and t >= 1 for t in ttft_a)
+    sa, sb = a.stats(), b.stats()
+    assert sa["ttft_p95_steps"] == sb["ttft_p95_steps"]
+    assert sa["ttft_p50_steps"] == sb["ttft_p50_steps"]
+
+
+def test_chunked_rejects_oversized_and_bad_config(setup):
+    """Typed failures survive the chunked path: oversized requests raise
+    at submit(); invalid chunk/budget/scheduler combos raise at __init__."""
+    cfg, params = setup
+    eng = _chunked_engine(cfg, params, chunk=8, max_len=32)
+    with pytest.raises(RequestTooLong):
+        eng.submit(Request(uid=0, prompt=np.arange(20, dtype=np.int32),
+                           max_new_tokens=20))
+    assert not eng.queue
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    scheduler="wave", prefill_chunk=8)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    scheduler="continuous", prefill_chunk=0)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, max_batch=2, max_len=32,
+                    scheduler="continuous", prefill_chunk=8,
+                    prefill_budget=0)

@@ -33,6 +33,7 @@ from repro.tuning import (
     prune,
     save_record,
     timing_runs,
+    tunable_kernels,
     tune,
     tune_kernels,
     tuning_fingerprint,
@@ -467,6 +468,123 @@ def test_second_tune_process_performs_zero_timing_runs(tmp_path):
     for _ in range(2):
         proc = subprocess.run(
             [sys.executable, "-c", _TUNE_SCRIPT], capture_output=True,
+            text=True, env=env, cwd=REPO_ROOT, check=True, timeout=300,
+        )
+        runs.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    assert runs[0]["cached"] is False and runs[0]["timing_runs"] > 0
+    assert runs[1]["cached"] is True and runs[1]["timing_runs"] == 0
+    assert runs[0]["config"] == runs[1]["config"]
+    assert runs[0]["fingerprint"] == runs[1]["fingerprint"]
+
+
+# ---------------------------------------------------------------------------
+# flash-prefill tuning space (ISSUE-7: the chunked-prefill kernel)
+# ---------------------------------------------------------------------------
+
+
+def _fp_args(B=2, C=16, KV=2, G=4, D=16, bs=8, nb=8):
+    """Args shaped like the registry workload (see _flash_prefill_workload)."""
+    n_blocks = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, C, KV, G, D), jnp.float32)
+    kn = jax.random.normal(ks[1], (B, C, KV, D), jnp.float32)
+    vn = jax.random.normal(ks[2], (B, C, KV, D), jnp.float32)
+    kp = jax.random.normal(ks[3], (n_blocks, bs, KV, D), jnp.float32)
+    vp = jax.random.normal(ks[4], (n_blocks, bs, KV, D), jnp.float32)
+    bt = jnp.asarray(1 + np.arange(B * nb).reshape(B, nb), jnp.int32)
+    return (q, kn, vn, kp, vp, bt, jnp.asarray((24, 0), jnp.int32))
+
+
+@pytest.fixture
+def fp_ops():
+    ops = get_kernel("flash-prefill")
+    ops.clear_tuned()
+    yield ops
+    ops.clear_tuned()
+
+
+def test_flash_prefill_is_tunable():
+    assert "flash-prefill" in tunable_kernels()
+
+
+def test_flash_prefill_space_clamps_and_rejects(fp_ops):
+    space = fp_ops.tuning_space
+    args = _fp_args()
+    # oversize tiles clamp to the problem (C=16 chunk, bs=8 pool blocks)
+    assert space.validate({"block_c": 64, "block_s": 512}, args) == {
+        "block_c": 16, "block_s": 8}
+    # block_s=0 means one tile per pool block and must survive validation
+    assert space.validate({"block_c": 8, "block_s": 0}, args) == {
+        "block_c": 8, "block_s": 8}
+    # a chunk width that does not divide C is rejected, not silently run
+    assert space.validate({"block_c": 3, "block_s": 8}, args) is None
+    # every enumerated candidate divides the problem after clamping
+    for cfg in space.candidates(args):
+        v = space.validate(cfg, args)
+        assert v is not None
+        assert 16 % v["block_c"] == 0 and 8 % v["block_s"] == 0
+
+
+def test_flash_prefill_traffic_monotone_in_block_c(fp_ops):
+    """Wider query tiles stream the causal KV prefix fewer times, so the
+    traffic model must be non-increasing in block_c — the property that
+    lets roofline pruning rank candidates soundly."""
+    space = fp_ops.tuning_space
+    args = _fp_args()
+    traffic = [space.traffic_model({"block_c": bc, "block_s": 8}, args)
+               for bc in (1, 2, 4, 8, 16)]
+    assert all(a >= b for a, b in zip(traffic, traffic[1:])), traffic
+    assert traffic[0] > traffic[-1]
+    # ... and pruning on this space orders survivors by predicted time
+    survivors, pruned = prune(space, args, hw.GRACE_CORE, "fp32", keep=4)
+    assert len(survivors) == 4 and pruned > 0
+    scores = [s for _, s in survivors]
+    assert scores == sorted(scores)
+
+
+def test_flash_prefill_tune_persists_and_validates(tmp_path, fp_ops):
+    """tune() on the prefill kernel returns a problem-valid config and
+    persists a record keyed by the prefill fingerprint."""
+    store = ArtifactStore(str(tmp_path))
+    args = _fp_args()
+    rec = tune("flash-prefill", args, keep=2, repeats=1, store=store)
+    assert not rec.cached
+    assert fp_ops.tuning_space.validate(rec.config, args) == rec.config
+    again = tune("flash-prefill", args, keep=2, repeats=1, store=store)
+    assert again.cached and again.config == rec.config
+
+
+_FP_TUNE_SCRIPT = """
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.tuning import timing_runs, tune
+B, C, KV, G, D, bs, nb = 2, 16, 2, 4, 16, 8, 8
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+args = (
+    jax.random.normal(ks[0], (B, C, KV, G, D), jnp.float32),
+    jax.random.normal(ks[1], (B, C, KV, D), jnp.float32),
+    jax.random.normal(ks[2], (B, C, KV, D), jnp.float32),
+    jax.random.normal(ks[3], (1 + B * nb, bs, KV, D), jnp.float32),
+    jax.random.normal(ks[4], (1 + B * nb, bs, KV, D), jnp.float32),
+    jnp.asarray(1 + np.arange(B * nb).reshape(B, nb), jnp.int32),
+    jnp.asarray((24, 0), jnp.int32),
+)
+rec = tune("flash-prefill", args, keep=2, repeats=1)
+print(json.dumps({"cached": rec.cached, "timing_runs": timing_runs(),
+                  "config": rec.config, "fingerprint": rec.fingerprint}))
+"""
+
+
+def test_second_prefill_tune_process_performs_zero_timing_runs(tmp_path):
+    """Cross-process acceptance for the new kernel: the second process
+    loads the persisted record and never times a candidate."""
+    env = {**os.environ, "PYTHONPATH": "src",
+           "REPRO_ARTIFACT_DIR": str(tmp_path)}
+    runs = []
+    for _ in range(2):
+        proc = subprocess.run(
+            [sys.executable, "-c", _FP_TUNE_SCRIPT], capture_output=True,
             text=True, env=env, cwd=REPO_ROOT, check=True, timeout=300,
         )
         runs.append(json.loads(proc.stdout.strip().splitlines()[-1]))

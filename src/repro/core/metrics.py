@@ -115,6 +115,25 @@ def slot_utilization(
     return min(1.0, busy_slot_steps / (steps * slots))
 
 
+def block_dedup_ratio(bytes_served: float, bytes_stored: float) -> float:
+    """KV-cache bytes served per byte physically stored — Eq. 1's lane
+    utilization as a *memory* metric.
+
+    Prefix sharing maps identical prompt prefixes onto the same physical
+    blocks, so one stored block can back several slots' logical caches:
+    ``bytes_served`` sums every slot's logical block-spans, while
+    ``bytes_stored`` counts distinct physical allocations (copy-on-write
+    copies included).  1.0 means no sharing (every logical byte has its
+    own physical byte, the fixed-width baseline); > 1.0 is the dedup win,
+    exactly as lane utilization > the scalar baseline is the predication
+    win.  Degenerate inputs (nothing stored yet) report the no-sharing
+    baseline rather than dividing by zero.
+    """
+    if bytes_stored <= 0:
+        return 1.0
+    return bytes_served / bytes_stored
+
+
 def arithmetic_intensity(flops: float, hbm_bytes: float) -> float:
     """AI = FLOPs / bytes moved from main memory (paper Sec. 3.3)."""
     if hbm_bytes <= 0:

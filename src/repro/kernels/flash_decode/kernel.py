@@ -106,13 +106,23 @@ def flash_decode(
     )(q, kt, vt, valid_len)
 
 
-def _decode_kernel_paged(bt_ref, q_ref, k_ref, v_ref, vl_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, bs: int, ns: int):
+def _decode_kernel_paged(bt_ref, *refs, bs: int, ns: int,
+                         quantized: bool = False):
     """Same online-softmax body as :func:`_decode_kernel`; the KV tile for
     logical block ``si`` of sequence ``b`` is DMA'd from pool block
     ``bt_ref[b, si]`` (scalar-prefetched block table drives the index_map),
     so the kernel streams a non-contiguous paged cache without ever
-    materializing a gathered copy."""
+    materializing a gathered copy.
+
+    ``quantized`` threads two per-row fp32 scale tiles (the ELEN axis of
+    the pool: int8 rows stream at 1/4 the HBM bytes and are widened back in
+    VMEM right before the MXU contraction)."""
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, vl_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, vl_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ks_ref = vs_ref = None
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -125,6 +135,12 @@ def _decode_kernel_paged(bt_ref, q_ref, k_ref, v_ref, vl_ref, o_ref,
     q = q_ref[0, 0]  # (G, D)
     k = k_ref[0, 0]  # (bs, D) — one pool block
     v = v_ref[0, 0]
+    if ks_ref is not None:  # dequantize the tile in VMEM, post-DMA
+        k = k.astype(jnp.float32) * ks_ref[0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0][:, None]
+    elif k.dtype != q.dtype:  # bf16 pool: widen to the compute dtype
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
     D = q.shape[-1]
     scale = 1.0 / math.sqrt(D)
 
@@ -157,6 +173,8 @@ def flash_decode_paged(
     block_tables: jax.Array,  # (B, nb) int32 — logical -> pool block map
     valid_len: jax.Array,    # (B,) int32 — live length per slot, >= 1
     *,
+    k_scale: jax.Array = None,  # (n_blocks, block_size) f32 — int8 pools
+    v_scale: jax.Array = None,
     interpret: bool = True,
 ) -> jax.Array:
     """Flash-decode over a PAGED cache: the continuous-batching serve path.
@@ -169,24 +187,43 @@ def flash_decode_paged(
     kernel, now compounded with block reuse across requests.  Slots with
     ``valid_len == 0`` produce unspecified output (they have no live
     tokens to attend over); the serving engine masks such slots itself.
+
+    Quantized paging (the ELEN axis of the pool): with int8 pools, pass
+    ``k_scale``/``v_scale`` — one fp32 scale per pool ROW, shared across
+    heads and the D axis — and each KV tile is dequantized in VMEM after
+    the (4x smaller) DMA.  bf16 pools need no scales; the tile is widened
+    to the query dtype before the contraction.
     """
     B, KV, G, D = q.shape
     bs = k_pool.shape[1]
     nb = block_tables.shape[1]
-    kernel = functools.partial(_decode_kernel_paged, bs=bs, ns=nb)
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        raise ValueError("k_scale and v_scale must be passed together")
+    kernel = functools.partial(_decode_kernel_paged, bs=bs, ns=nb,
+                               quantized=quantized)
     from jax.experimental.pallas import tpu as pltpu
 
     kt = k_pool.transpose(0, 2, 1, 3)  # (n_blocks, KV, bs, D): head-major
     vt = v_pool.transpose(0, 2, 1, 3)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D), lambda b, h, s, bt: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
+    ]
+    operands = [block_tables, q, kt, vt]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bs), lambda b, h, s, bt: (bt[b, s], 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s, bt: (bt[b, s], 0)),
+        ]
+        operands += [k_scale, v_scale]
+    in_specs.append(pl.BlockSpec((1,), lambda b, h, s, bt: (b,)))
+    operands.append(valid_len)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KV, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D), lambda b, h, s, bt: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, D), lambda b, h, s, bt: (bt[b, s], h, 0, 0)),
-            pl.BlockSpec((1,), lambda b, h, s, bt: (b,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s, bt: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
@@ -199,7 +236,7 @@ def flash_decode_paged(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
-    )(block_tables, q, kt, vt, valid_len)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -236,9 +273,46 @@ def _prefill_commit_kernel(bt_ref, qs_ref, ql_ref, kn_ref, vn_ref,
     vo_ref[0] = jnp.where(sel, v_over, v_blk)
 
 
-def _prefill_attn_kernel(bt_ref, q_ref, k_ref, v_ref, qs_ref, ql_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *,
-                         block_c: int, block_s: int, ns: int, G: int):
+def _quantize_rows_kernel(x):
+    """Per-row symmetric int8: one fp32 scale per pool row, amax over the
+    (heads, D) extent of that row.  ``x`` is (KV, bs, D); returns the int8
+    rows and the (bs,) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(0, 2))
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s[None, :, None]), -127, 127
+    ).astype(jnp.int8)
+    return q, s
+
+
+def _prefill_commit_kernel_q(bt_ref, qs_ref, ql_ref, kn_ref, vn_ref,
+                             kp_ref, vp_ref, ksp_ref, vsp_ref,
+                             ko_ref, vo_ref, kso_ref, vso_ref,
+                             *, bs: int, C: int):
+    """Quantizing variant of :func:`_prefill_commit_kernel`: chunk rows are
+    quantized to int8 with one fresh fp32 scale per pool row before the
+    overlay, and the scale pools ride through the same block-table-indexed
+    write-back (rows outside the chunk keep block AND scale bytes)."""
+    si = pl.program_id(1)
+    q_start = qs_ref[0]
+    q_len = ql_ref[0]
+    pos = si * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    c_idx = pos - q_start
+    in_chunk = (c_idx >= 0) & (c_idx < q_len)
+    c_clip = jnp.clip(c_idx, 0, C - 1)
+    k_over = jnp.take(kn_ref[0], c_clip, axis=1)  # (KV, bs, D) chunk rows
+    v_over = jnp.take(vn_ref[0], c_clip, axis=1)
+    kq, ks = _quantize_rows_kernel(k_over)
+    vq, vs = _quantize_rows_kernel(v_over)
+    sel = in_chunk[None, :, None]
+    ko_ref[0] = jnp.where(sel, kq, kp_ref[0])
+    vo_ref[0] = jnp.where(sel, vq, vp_ref[0])
+    kso_ref[0] = jnp.where(in_chunk, ks, ksp_ref[0])
+    vso_ref[0] = jnp.where(in_chunk, vs, vsp_ref[0])
+
+
+def _prefill_attn_kernel(bt_ref, *refs, block_c: int, block_s: int,
+                         ns: int, G: int, quantized: bool = False):
     """Causal online-softmax over one (query-tile, KV-block) grid cell.
 
     Same running (max, sum, acc) recurrence as :func:`_decode_kernel_paged`
@@ -247,7 +321,16 @@ def _prefill_attn_kernel(bt_ref, q_ref, k_ref, v_ref, qs_ref, ql_ref, o_ref,
     covers the whole (block_c*G, block_s) score panel.  KV blocks beyond
     the tile's causal frontier are never issued — prompt-length
     predication, one level up from the decode kernel's ``valid_len``.
+    ``quantized`` dequantizes each int8 KV sub-tile with its per-row fp32
+    scales, exactly as the decode kernel does.
     """
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, qs_ref, ql_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, qs_ref, ql_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     qi = pl.program_id(2)
     si = pl.program_id(3)
 
@@ -263,6 +346,12 @@ def _prefill_attn_kernel(bt_ref, q_ref, k_ref, v_ref, qs_ref, ql_ref, o_ref,
     q = q.reshape(block_c * G, D)
     k = k_ref[0, 0]  # (block_s, D)
     v = v_ref[0, 0]
+    if ks_ref is not None:
+        k = k.astype(jnp.float32) * ks_ref[0][:, None]
+        v = v.astype(jnp.float32) * vs_ref[0][:, None]
+    elif k.dtype != q.dtype:
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
     scale = 1.0 / math.sqrt(D)
 
     pos = si * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)[0]
@@ -303,6 +392,8 @@ def flash_prefill_paged(
     q_start: jax.Array,       # (B,) int32 — live context length before chunk
     q_len: jax.Array = None,  # (B,) int32 — valid chunk rows (default C)
     *,
+    k_scale: jax.Array = None,  # (n_blocks, block_size) f32 — int8 pools
+    v_scale: jax.Array = None,
     block_c: int = 8,
     block_s: int = 0,
     interpret: bool = True,
@@ -326,6 +417,12 @@ def flash_prefill_paged(
     * the NULL block and pool blocks no table row references have
       unspecified content on return — compare through block tables.
 
+    Quantized paging: with int8 pools pass ``k_scale``/``v_scale`` (one
+    fp32 scale per pool row).  The commit kernel quantizes the chunk's
+    rows and writes fresh scales alongside the blocks; the attend kernel
+    dequantizes each sub-tile in VMEM.  The return grows to ``(out,
+    k_pool', v_pool', k_scale', v_scale')``.  bf16 pools need no scales.
+
     Returns ``(out, k_pool', v_pool')`` with ``out`` shaped like ``q`` and
     the pools in their caller layout.
     """
@@ -334,6 +431,9 @@ def flash_prefill_paged(
     B, C, KV, G, D = q.shape
     bs = k_pool.shape[1]
     nb = block_tables.shape[1]
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        raise ValueError("k_scale and v_scale must be passed together")
     if q_len is None:
         q_len = jnp.full((B,), C, jnp.int32)
     bc = min(block_c, C)
@@ -348,49 +448,82 @@ def flash_prefill_paged(
     kn = k_new.transpose(0, 2, 1, 3)   # (B, KV, C, D)
     vn = v_new.transpose(0, 2, 1, 3)
 
+    pool_spec = pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0))
+    scale_spec = pl.BlockSpec((1, bs), lambda b, s, bt: (bt[b, s], 0))
+    commit_in = [
+        pl.BlockSpec((1,), lambda b, s, bt: (b,)),
+        pl.BlockSpec((1,), lambda b, s, bt: (b,)),
+        pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
+        pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
+        pool_spec, pool_spec,
+    ]
+    commit_out = [pool_spec, pool_spec]
+    commit_operands = [block_tables, q_start, q_len, kn, vn, kp, vp]
+    commit_shapes = [
+        jax.ShapeDtypeStruct(kp.shape, kp.dtype),
+        jax.ShapeDtypeStruct(vp.shape, vp.dtype),
+    ]
+    # pool (and scale) operands alias their outputs so unvisited blocks
+    # keep their bytes (indices count the scalar-prefetch operand)
+    aliases = {5: 0, 6: 1}
+    if quantized:
+        commit_in += [scale_spec, scale_spec]
+        commit_out += [scale_spec, scale_spec]
+        commit_operands += [k_scale, v_scale]
+        commit_shapes += [
+            jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+            jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype),
+        ]
+        aliases = {5: 0, 6: 1, 7: 2, 8: 3}
     commit_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, nb),
-        in_specs=[
-            pl.BlockSpec((1,), lambda b, s, bt: (b,)),
-            pl.BlockSpec((1,), lambda b, s, bt: (b,)),
-            pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
-            pl.BlockSpec((1, KV, C, D), lambda b, s, bt: (b, 0, 0, 0)),
-            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
-            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
-            pl.BlockSpec((1, KV, bs, D), lambda b, s, bt: (bt[b, s], 0, 0, 0)),
-        ],
+        in_specs=commit_in,
+        out_specs=commit_out,
     )
-    kp, vp = pl.pallas_call(
-        functools.partial(_prefill_commit_kernel, bs=bs, C=C),
+    commit_body = (
+        functools.partial(_prefill_commit_kernel_q, bs=bs, C=C) if quantized
+        else functools.partial(_prefill_commit_kernel, bs=bs, C=C)
+    )
+    committed = pl.pallas_call(
+        commit_body,
         grid_spec=commit_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct(kp.shape, kp.dtype),
-            jax.ShapeDtypeStruct(vp.shape, vp.dtype),
-        ],
-        # pool operands alias their outputs so unvisited blocks keep their
-        # bytes (indices count the scalar-prefetch operand)
-        input_output_aliases={5: 0, 6: 1},
+        out_shape=commit_shapes,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(block_tables, q_start, q_len, kn, vn, kp, vp)
+    )(*commit_operands)
+    if quantized:
+        kp, vp, k_scale, v_scale = committed
+    else:
+        kp, vp = committed
 
     qh = q.transpose(0, 2, 1, 3, 4)  # (B, KV, C, G, D)
+    attn_in = [
+        pl.BlockSpec((1, 1, bc, G, D),
+                     lambda b, h, qi, s, bt: (b, h, qi, 0, 0)),
+        pl.BlockSpec((1, 1, bks, D),
+                     lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
+        pl.BlockSpec((1, 1, bks, D),
+                     lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
+    ]
+    attn_operands = [block_tables, qh, kp, vp]
+    if quantized:
+        attn_in += [
+            pl.BlockSpec((1, bks),
+                         lambda b, h, qi, s, bt: (bt[b, s // spp], s % spp)),
+            pl.BlockSpec((1, bks),
+                         lambda b, h, qi, s, bt: (bt[b, s // spp], s % spp)),
+        ]
+        attn_operands += [k_scale, v_scale]
+    attn_in += [
+        pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
+        pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
+    ]
+    attn_operands += [q_start, q_len]
     attn_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KV, C // bc, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1, bc, G, D),
-                         lambda b, h, qi, s, bt: (b, h, qi, 0, 0)),
-            pl.BlockSpec((1, 1, bks, D),
-                         lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
-            pl.BlockSpec((1, 1, bks, D),
-                         lambda b, h, qi, s, bt: (bt[b, s // spp], h, s % spp, 0)),
-            pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
-            pl.BlockSpec((1,), lambda b, h, qi, s, bt: (b,)),
-        ],
+        in_specs=attn_in,
         out_specs=pl.BlockSpec((1, 1, bc, G, D),
                                lambda b, h, qi, s, bt: (b, h, qi, 0, 0)),
         scratch_shapes=[
@@ -401,11 +534,15 @@ def flash_prefill_paged(
     )
     out = pl.pallas_call(
         functools.partial(_prefill_attn_kernel, block_c=bc, block_s=bks,
-                          ns=ns, G=G),
+                          ns=ns, G=G, quantized=quantized),
         grid_spec=attn_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, C, G, D), q.dtype),
         interpret=interpret,
-    )(block_tables, qh, kp, vp, q_start, q_len)
+    )(*attn_operands)
 
-    return (out.transpose(0, 2, 1, 3, 4),
-            kp.transpose(0, 2, 1, 3), vp.transpose(0, 2, 1, 3))
+    out = out.transpose(0, 2, 1, 3, 4)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+    if quantized:
+        return out, kp, vp, k_scale, v_scale
+    return out, kp, vp

@@ -23,29 +23,59 @@ def decode_ref(q, k, v, valid_len):
     return out.astype(q.dtype)
 
 
-def decode_paged_ref(q, k_pool, v_pool, block_tables, valid_len):
+def quantize_rows(x):
+    """Per-row symmetric int8 for a pool-layout array ``x`` (..., bs, KV, D):
+    one fp32 scale per (block, row), amax over that row's (KV, D) extent —
+    the exact formula the commit kernel applies.  Returns (int8, scales)
+    with scales shaped like ``x`` minus its last two axes."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / s[..., None, None]), -127, 127
+    ).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_pool(pool, scale):
+    """Widen an int8 pool (n_blocks, bs, KV, D) back to fp32 with its
+    per-row scales (n_blocks, bs)."""
+    return pool.astype(jnp.float32) * scale[..., None, None]
+
+
+def decode_paged_ref(q, k_pool, v_pool, block_tables, valid_len,
+                     k_scale=None, v_scale=None):
     """Paged oracle: gather each slot's logical view, then run the dense
     reference.  q (B,KV,G,D); k/v_pool (n_blocks, bs, KV, D); block_tables
-    (B, nb); valid_len (B,) with every live slot >= 1."""
+    (B, nb); valid_len (B,) with every live slot >= 1.  With int8 pools
+    pass ``k_scale``/``v_scale`` (n_blocks, bs) and the gather dequantizes
+    first — the whole-array analogue of the kernel's per-tile widening."""
     B = q.shape[0]
     nb = block_tables.shape[1]
     bs = k_pool.shape[1]
+    if k_scale is not None:
+        k_pool = dequantize_pool(k_pool, k_scale)
+        v_pool = dequantize_pool(v_pool, v_scale)
     k = k_pool[block_tables].reshape(B, nb * bs, *k_pool.shape[2:])
     v = v_pool[block_tables].reshape(B, nb * bs, *v_pool.shape[2:])
     return decode_ref(q, k, v, valid_len)
 
 
 def prefill_paged_ref(q, k_new, v_new, k_pool, v_pool, block_tables,
-                      q_start, q_len=None):
+                      q_start, q_len=None, k_scale=None, v_scale=None):
     """Chunked-prefill oracle: scatter the chunk into the pools through the
     block tables, then run dense causal attention over each slot's gathered
     view.  q (B,C,KV,G,D); k/v_new (B,C,KV,D); pools (n_blocks,bs,KV,D);
     block_tables (B,nb); q_start/q_len (B,).  Returns (out, k_pool',
     v_pool') — the same contract as ``flash_prefill_paged`` (rows at or
-    past ``q_len`` are neither committed nor defined in the output)."""
+    past ``q_len`` are neither committed nor defined in the output).  With
+    int8 pools pass ``k_scale``/``v_scale``: chunk rows are quantized with
+    :func:`quantize_rows` before the scatter, scales scattered alongside,
+    and the gathered view dequantized — the return grows to ``(out,
+    k_pool', v_pool', k_scale', v_scale')``."""
     B, C, KV, G, D = q.shape
     bs = k_pool.shape[1]
     nb = block_tables.shape[1]
+    quantized = k_scale is not None
     if q_len is None:
         q_len = jnp.full((B,), C, jnp.int32)
     pos = q_start[:, None] + jnp.arange(C)[None, :]           # (B, C) global
@@ -55,13 +85,25 @@ def prefill_paged_ref(q, k_new, v_new, k_pool, v_pool, block_tables,
     kf = k_pool.reshape(-1, KV, D)
     vf = v_pool.reshape(-1, KV, D)
     idx = jnp.where(valid, flat, kf.shape[0]).reshape(-1)     # OOB rows drop
-    kf = kf.at[idx].set(k_new.reshape(-1, KV, D), mode="drop")
-    vf = vf.at[idx].set(v_new.reshape(-1, KV, D), mode="drop")
+    k_rows, v_rows = k_new, v_new
+    if quantized:
+        k_rows, ks_rows = quantize_rows(k_new)
+        v_rows, vs_rows = quantize_rows(v_new)
+        k_scale2 = k_scale.reshape(-1).at[idx].set(
+            ks_rows.reshape(-1), mode="drop").reshape(k_scale.shape)
+        v_scale2 = v_scale.reshape(-1).at[idx].set(
+            vs_rows.reshape(-1), mode="drop").reshape(v_scale.shape)
+    kf = kf.at[idx].set(k_rows.reshape(-1, KV, D), mode="drop")
+    vf = vf.at[idx].set(v_rows.reshape(-1, KV, D), mode="drop")
     k_pool2 = kf.reshape(k_pool.shape)
     v_pool2 = vf.reshape(v_pool.shape)
 
-    k = k_pool2[block_tables].reshape(B, nb * bs, KV, D)
-    v = v_pool2[block_tables].reshape(B, nb * bs, KV, D)
+    kd, vd = k_pool2, v_pool2
+    if quantized:
+        kd = dequantize_pool(k_pool2, k_scale2)
+        vd = dequantize_pool(v_pool2, v_scale2)
+    k = kd[block_tables].reshape(B, nb * bs, KV, D)
+    v = vd[block_tables].reshape(B, nb * bs, KV, D)
     s = jnp.einsum("bckgd,bskd->bckgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(D)
     j = jnp.arange(nb * bs)
@@ -69,7 +111,10 @@ def prefill_paged_ref(q, k_new, v_new, k_pool, v_pool, block_tables,
     s = jnp.where(causal[:, :, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bckgs,bskd->bckgd", p, v.astype(jnp.float32))
-    return out.astype(q.dtype), k_pool2, v_pool2
+    out = out.astype(q.dtype)
+    if quantized:
+        return out, k_pool2, v_pool2, k_scale2, v_scale2
+    return out, k_pool2, v_pool2
 
 
 def prefill_flops_bytes(B, C, KV, G, D, q_start, dtype_bytes: int = 2) -> dict:

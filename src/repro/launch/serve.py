@@ -10,10 +10,15 @@ the paged KV cache.  ``--prefill-chunk N`` commits up to N prompt tokens
 per fused step (chunked prefill) and ``--prefill-budget`` caps the total
 prefill tokens admitted per step so decode never stalls behind a long
 prompt — both land in the report and the ledger key, so chunked and
-token-by-token trajectories stay separate.  ``--record`` appends the serving metrics (tok/s,
-p50/p95 request latency, slot utilization) to the perf trajectory ledger,
-where ``python -m repro.perf report`` renders them; ``--out`` writes the
-full machine-readable serve report.
+token-by-token trajectories stay separate.  ``--kv-dtype bf16|int8``
+stores the paged KV pool quantized (per-row fp32 scales for int8) and
+``--share-prefixes`` deduplicates identical prompt prefixes onto shared
+pool blocks with copy-on-write (``--shared-prefix-len N`` samples traffic
+that exercises it); both fork the ledger key (``+kv<dtype>`` /
+``+shared``).  ``--record`` appends the serving metrics (tok/s,
+p50/p95 request latency, slot utilization, block dedup ratio) to the perf
+trajectory ledger, where ``python -m repro.perf report`` renders them;
+``--out`` writes the full machine-readable serve report.
 """
 
 from __future__ import annotations
@@ -41,6 +46,8 @@ def build_report(args: argparse.Namespace, engine: ServeEngine,
         "block_size": engine.block_size,
         "prefill_chunk": engine.prefill_chunk,
         "prefill_budget": engine.prefill_budget,
+        "kv_dtype": engine.kv_dtype,
+        "share_prefixes": engine.share_prefixes,
         "rejected": len(rejections),
         "rejections": [{"uid": u, "reason": reason} for u, reason in rejections],
         "stats": engine.stats(),
@@ -81,6 +88,18 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="cap total prefill tokens admitted per step so "
                          "decode slots never stall behind long prompts")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8"],
+                    default="f32",
+                    help="paged KV pool storage dtype (quantized paging; "
+                         "continuous scheduler only for bf16/int8)")
+    ap.add_argument("--share-prefixes", action="store_true",
+                    help="deduplicate identical prompt prefixes onto "
+                         "shared pool blocks with copy-on-write "
+                         "(continuous scheduler only)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="sample all prompts with a common prefix of this "
+                         "length (exercises --share-prefixes; 0 = fully "
+                         "random prompts)")
     ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="compile the fused step before serving so TTFT "
@@ -99,18 +118,27 @@ def main(argv=None) -> int:
                          max_len=args.max_len, scheduler=args.scheduler,
                          block_size=args.block_size,
                          prefill_chunk=args.prefill_chunk,
-                         prefill_budget=args.prefill_budget)
+                         prefill_budget=args.prefill_budget,
+                         kv_dtype=args.kv_dtype,
+                         share_prefixes=args.share_prefixes)
     if args.warmup:
         engine.warmup()
 
     rng = np.random.default_rng(args.seed)
+    shared_prefix = (
+        rng.integers(0, cfg.vocab,
+                     size=args.shared_prefix_len).astype(np.int32)
+        if args.shared_prefix_len > 0 else None)
     rejections: list = []
     for uid in range(args.requests):
         plen = int(rng.integers(args.prompt_lo, args.prompt_hi + 1))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        if shared_prefix is not None:
+            prompt = np.concatenate([shared_prefix, prompt])
         try:
             engine.submit(Request(
                 uid=uid,
-                prompt=rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+                prompt=prompt,
                 max_new_tokens=args.max_new,
             ))
         except RequestTooLong as e:
@@ -132,6 +160,14 @@ def main(argv=None) -> int:
              + (f", budget {engine.prefill_budget}"
                 if engine.prefill_budget else "") + "]"
              if engine.prefill_chunk > 1 else ""))
+    if engine.kv_dtype != "f32" or engine.share_prefixes:
+        print(f"  kv_dtype {stats['kv_dtype']}, "
+              f"prefix sharing {'on' if stats['share_prefixes'] else 'off'}: "
+              f"{stats['logical_blocks']} logical / "
+              f"{stats['physical_blocks']} physical blocks "
+              f"({stats['shared_block_hits']} shared hits, "
+              f"{stats['cow_copies']} COW copies, "
+              f"dedup {stats['block_dedup_ratio']:.3f})")
     if rejections:
         print(f"  rejected {len(rejections)} oversized request(s) at submit:")
         for uid, reason in rejections:

@@ -393,9 +393,28 @@ def decode_step(
 #: garbage space and can never corrupt a live request's cache.
 NULL_BLOCK = 0
 
+#: KV pool storage dtypes along the paper's ELEN axis: "f32" keeps the
+#: pool in the model's compute dtype (the unquantized baseline), "bf16"
+#: halves it, "int8" quarters it with one fp32 scale per (token row,
+#: cache key) — more elements per vector lane at lower precision, the
+#: same trade the paper's ELEN sweep measures.
+KV_DTYPES = ("f32", "bf16", "int8")
+
+
+def _pool_dtype(cfg: ModelConfig, kv_dtype: str):
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    if kv_dtype == "bf16":
+        return jnp.bfloat16
+    if kv_dtype == "int8":
+        return jnp.int8
+    return jnp.dtype(cfg.compute_dtype)
+
 
 def init_paged_cache(
-    cfg: ModelConfig, slots: int, max_len: int, block_size: int
+    cfg: ModelConfig, slots: int, max_len: int, block_size: int,
+    kv_dtype: str = "f32",
 ) -> Dict[str, Any]:
     """Paged cache pytree: attention caches become pooled blocks.
 
@@ -407,11 +426,18 @@ def init_paged_cache(
     :data:`NULL_BLOCK` — so admission never fails and freed blocks are
     recycled across requests.  SSM / conv states are O(1) per slot and stay
     densely indexed by slot (there is nothing to page).
+
+    ``kv_dtype`` selects the pool's storage precision (:data:`KV_DTYPES`);
+    ``"int8"`` adds an fp32 ``<key>_scale`` pool of shape ``(nsb,
+    n_blocks, block_size)`` — one symmetric scale per committed token row,
+    so dequantization is exact per row and stale rows can never poison a
+    live one through a shared scale.
     """
     if max_len % block_size:
         raise ValueError(f"max_len {max_len} not a multiple of block_size "
                          f"{block_size}")
-    dtype = jnp.dtype(cfg.compute_dtype)
+    dtype = jnp.dtype(cfg.compute_dtype)  # SSM/conv states: never quantized
+    pool_dtype = _pool_dtype(cfg, kv_dtype)
     nsb = cfg.n_superblocks
     n_blocks = 1 + slots * (max_len // block_size)
     cache: Dict[str, Any] = {"blocks": {}}
@@ -421,16 +447,25 @@ def init_paged_cache(
             ml = cfg.mla
             c = {
                 "c": jnp.zeros(
-                    (stacked, n_blocks, block_size, ml.kv_lora_rank), dtype),
+                    (stacked, n_blocks, block_size, ml.kv_lora_rank),
+                    pool_dtype),
                 "k_rope": jnp.zeros(
-                    (stacked, n_blocks, block_size, ml.qk_rope_dim), dtype),
+                    (stacked, n_blocks, block_size, ml.qk_rope_dim),
+                    pool_dtype),
             }
         else:
             kv, hd = cfg.n_kv_heads, cfg.head_dim
             c = {
-                "k": jnp.zeros((stacked, n_blocks, block_size, kv, hd), dtype),
-                "v": jnp.zeros((stacked, n_blocks, block_size, kv, hd), dtype),
+                "k": jnp.zeros((stacked, n_blocks, block_size, kv, hd),
+                               pool_dtype),
+                "v": jnp.zeros((stacked, n_blocks, block_size, kv, hd),
+                               pool_dtype),
             }
+        if kv_dtype == "int8":
+            for k in list(c):
+                c[k + "_scale"] = jnp.zeros(
+                    (stacked, n_blocks, block_size), jnp.float32
+                )
         return c
 
     for i, kind in enumerate(cfg.superblock):
@@ -509,6 +544,68 @@ def reset_paged_slots(cache: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
     return new
 
 
+def copy_paged_block(
+    cache: Dict[str, Any], src: jax.Array, dst: jax.Array
+) -> Dict[str, Any]:
+    """Copy physical pool block ``src`` into ``dst`` on every paged leaf.
+
+    The device half of copy-on-write: when a slot is about to write a
+    generated token into a block other slots still reference, the engine
+    allocates ``dst``, copies ``src``'s bytes (scale pools included — a
+    quantized row travels with its scale), and repoints its block table.
+    ``src``/``dst`` may be traced scalars, so one jit trace serves every
+    copy.  SSM/conv states are per-slot, not paged; they pass through.
+    """
+    def _copy(slot_cache, stacked: bool):
+        out = {}
+        for k, leaf in slot_cache.items():
+            if k in _SEQ_CACHE_KEYS or k.endswith("_scale"):
+                if stacked:
+                    out[k] = leaf.at[:, dst].set(leaf[:, src])
+                else:
+                    out[k] = leaf.at[dst].set(leaf[src])
+            else:
+                out[k] = leaf
+        return out
+
+    new = dict(cache)
+    new["blocks"] = {s: _copy(c, True) for s, c in cache["blocks"].items()}
+    if "first_block" in cache:
+        new["first_block"] = _copy(cache["first_block"], False)
+    return new
+
+
+def paged_block_bytes(
+    cfg: ModelConfig, block_size: int, kv_dtype: str = "f32"
+) -> int:
+    """Bytes one physical block stores across every attention layer.
+
+    Host-side arithmetic (no device pool needed) for the block-dedup
+    ratio: logical blocks served x this = bytes served, physical blocks
+    allocated x this = bytes stored.  int8 counts its fp32 per-row scales
+    — the quantized pool's true footprint.
+    """
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    itemsize = {
+        "f32": jnp.dtype(cfg.compute_dtype).itemsize, "bf16": 2, "int8": 1,
+    }[kv_dtype]
+    if cfg.mla is not None:
+        row_elems = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+    else:
+        row_elems = 2 * cfg.n_kv_heads * cfg.head_dim
+    n_attn = cfg.n_superblocks * sum(
+        1 for k in cfg.superblock if k == LayerKind.ATTN
+    )
+    if cfg.moe is not None and cfg.moe.first_dense:
+        n_attn += 1  # the unstacked first dense block pages its cache too
+    per_layer = block_size * row_elems * itemsize
+    if kv_dtype == "int8":
+        per_layer += 2 * block_size * 4  # one fp32 scale per row per key
+    return n_attn * per_layer
+
+
 def _commit_paged_masked(pool, delta, flat_idx, key: str, stacked: bool,
                          active: jax.Array):
     """Commit one token's delta, predicated per slot on ``active`` (B,).
@@ -527,6 +624,53 @@ def _commit_paged_masked(pool, delta, flat_idx, key: str, stacked: bool,
     return jnp.where(m, new, pool)
 
 
+def _quantize_token(delta, stacked: bool):
+    """Symmetric per-row int8 quantization of one token's cache slice.
+
+    delta: ``(nsb, B, 1, ...)`` (stacked) or ``(B, 1, ...)`` float ->
+    ``(q int8 same shape, scale fp32 (nsb, B, 1) / (B, 1))``.  One scale
+    per committed row keeps dequantization exact per token: a recycled or
+    null-block row's garbage scale can never touch a live row.
+    """
+    lead = 3 if stacked else 2
+    axes = tuple(range(lead, delta.ndim))
+    amax = jnp.max(jnp.abs(delta.astype(jnp.float32)), axis=axes)
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    sb = s.reshape(s.shape + (1,) * (delta.ndim - s.ndim))
+    q = jnp.clip(jnp.round(delta.astype(jnp.float32) / sb), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _commit_slot(c_slot, slot_deltas, flat_idx, stacked: bool,
+                 active: jax.Array, kv_dtype: str):
+    """Commit one layer-slot's deltas, carrying non-delta leaves through.
+
+    Scale pools have no delta of their own — they are derived from their
+    data leaf's delta at commit time — so this iterates the CACHE's keys,
+    not the delta's: a quantized pool's ``<key>_scale`` leaf is written
+    alongside ``<key>`` and every other leaf passes through untouched.
+    """
+    out = {}
+    for k, leaf in c_slot.items():
+        if k.endswith("_scale"):
+            continue  # written alongside its data leaf below
+        d = slot_deltas.get(k)
+        if d is None:
+            out[k] = leaf
+            if k + "_scale" in c_slot:
+                out[k + "_scale"] = c_slot[k + "_scale"]
+        elif k in _SEQ_CACHE_KEYS and kv_dtype == "int8":
+            q, s = _quantize_token(d, stacked)
+            out[k] = _commit_paged(leaf, q, flat_idx, k, stacked)
+            out[k + "_scale"] = _commit_paged(
+                c_slot[k + "_scale"], s, flat_idx, k, stacked
+            )
+        else:
+            out[k] = _commit_paged_masked(leaf, d, flat_idx, k, stacked,
+                                          active)
+    return out
+
+
 def _paged_token_step(
     params,
     cfg: ModelConfig,
@@ -537,6 +681,7 @@ def _paged_token_step(
     active: jax.Array,
     *,
     block_size: int,
+    kv_dtype: str = "f32",
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """The shared one-token cell of the paged serve path.
 
@@ -547,6 +692,11 @@ def _paged_token_step(
     token-by-token decode.  ``active`` (B,) predicates commits: inactive
     slots scatter their sequence writes into NULL_BLOCK and keep their
     recurrent state, exactly like idle slots always have.
+
+    With ``kv_dtype != "f32"`` the sequence pools are stored quantized:
+    gathers dequantize back to the compute dtype (int8 multiplies by the
+    per-row fp32 scale) and commits quantize the new token's row — the
+    attention math itself always runs at compute precision.
     """
     pos_b = positions.astype(jnp.int32)
     nb = block_tables.shape[1]
@@ -557,14 +707,29 @@ def _paged_token_step(
         active, blk * block_size + pos_b % block_size,
         NULL_BLOCK * block_size,
     )  # (B,) pool token index
-    x = layers.embed(params["embed"], tokens).astype(jnp.dtype(cfg.compute_dtype))
+    compute = jnp.dtype(cfg.compute_dtype)
+    x = layers.embed(params["embed"], tokens).astype(compute)
 
     def _view(c_slot):
-        """Gather logical per-slot views of this layer's sequence pools."""
-        return {
-            k: _gather_paged(leaf, block_tables) if k in _SEQ_CACHE_KEYS else leaf
-            for k, leaf in c_slot.items()
-        }
+        """Gather logical per-slot views of this layer's sequence pools,
+        dequantizing quantized storage back to compute precision."""
+        out = {}
+        for k, leaf in c_slot.items():
+            if k.endswith("_scale"):
+                continue  # consumed by its data leaf's dequant below
+            if k not in _SEQ_CACHE_KEYS:
+                out[k] = leaf
+                continue
+            g = _gather_paged(leaf, block_tables)
+            if kv_dtype == "int8":
+                s = _gather_paged(c_slot[k + "_scale"], block_tables)
+                g = g.astype(compute) * s.reshape(
+                    s.shape + (1,) * (g.ndim - s.ndim)
+                ).astype(compute)
+            elif kv_dtype == "bf16":
+                g = g.astype(compute)
+            out[k] = g
+        return out
 
     new_cache: Dict[str, Any] = {"blocks": None}
     if "first_block" in params:
@@ -572,11 +737,9 @@ def _paged_token_step(
             params["first_block"], cfg, LayerKind.ATTN, False, x,
             _view(cache["first_block"]), pos_b,
         )
-        new_cache["first_block"] = {
-            k: _commit_paged_masked(cache["first_block"][k], d, flat_idx, k,
-                                    False, active)
-            for k, d in fb_delta.items()
-        }
+        new_cache["first_block"] = _commit_slot(
+            cache["first_block"], fb_delta, flat_idx, False, active, kv_dtype
+        )
 
     def scan_body(x, inp):
         p_blk, c_blk = inp
@@ -591,11 +754,8 @@ def _paged_token_step(
 
     x, deltas = jax.lax.scan(scan_body, x, (params["blocks"], cache["blocks"]))
     new_cache["blocks"] = {
-        slot: {
-            k: _commit_paged_masked(cache["blocks"][slot][k], d, flat_idx, k,
-                                    True, active)
-            for k, d in slot_deltas.items()
-        }
+        slot: _commit_slot(cache["blocks"][slot], slot_deltas, flat_idx,
+                           True, active, kv_dtype)
         for slot, slot_deltas in deltas.items()
     }
 
@@ -617,6 +777,7 @@ def decode_step_paged(
     block_tables: jax.Array,
     *,
     block_size: int,
+    kv_dtype: str = "f32",
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One continuous-batching serve step over the paged cache.
 
@@ -631,7 +792,7 @@ def decode_step_paged(
     active = jnp.ones((tokens.shape[0],), jnp.bool_)
     return _paged_token_step(
         params, cfg, tokens, cache, positions, block_tables, active,
-        block_size=block_size,
+        block_size=block_size, kv_dtype=kv_dtype,
     )
 
 
@@ -645,6 +806,7 @@ def prefill_step_paged(
     lengths: jax.Array,
     *,
     block_size: int,
+    kv_dtype: str = "f32",
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """Commit a chunk of C prompt tokens per slot in ONE fused call.
 
@@ -670,7 +832,7 @@ def prefill_step_paged(
         tok_c, c = xs
         logits, cache = _paged_token_step(
             params, cfg, tok_c[:, None], cache, pos0 + c, block_tables,
-            c < lens, block_size=block_size,
+            c < lens, block_size=block_size, kv_dtype=kv_dtype,
         )
         return cache, logits[:, 0]
 

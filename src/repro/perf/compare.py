@@ -81,6 +81,17 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("rejected", "higher", 0.0),
         MetricSpec("preemptions", "higher", 0.0),
         MetricSpec("restarts", "higher", 0.0),
+        # block-pool dedup counters: deterministic given the trace.  The
+        # dedup ratio falling (or physical blocks growing) means prefix
+        # sharing stopped finding matches or COW started copying more —
+        # the memory-side Eq. 1 regression
+        MetricSpec("block_dedup_ratio", "lower", 0.0),
+        MetricSpec("physical_blocks", "higher", 0.0),
+        MetricSpec("logical_blocks", "lower", 0.0),
+        MetricSpec("shared_block_hits", "lower", 0.0),
+        MetricSpec("cow_copies", "higher", 0.0),
+        MetricSpec("kv_bytes_served", "lower", 0.0),
+        MetricSpec("kv_bytes_stored", "higher", 0.0),
     )
 }
 

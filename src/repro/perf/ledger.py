@@ -291,6 +291,12 @@ _SERVING_METRICS = (
     "p50_latency_s", "p95_latency_s", "ttft_p50_s", "ttft_p95_s",
     "ttft_p50_steps", "ttft_p95_steps",
     "preemptions", "rejected", "restarts", "prefill_chunk",
+    # block-pool dedup (prefix sharing + quantized paging): deterministic
+    # given the trace, so the gate holds the counters exactly and the
+    # dedup ratio — the memory-side Eq. 1 analogue — like slot_utilization
+    "logical_blocks", "physical_blocks", "shared_block_hits",
+    "cow_copies", "kv_bytes_served", "kv_bytes_stored",
+    "block_dedup_ratio",
 )
 
 #: _SERVING_METRICS names that are exact counters (held tight by the gate);
@@ -298,6 +304,8 @@ _SERVING_METRICS = (
 _SERVING_INT_METRICS = frozenset((
     "requests", "new_tokens", "fused_steps", "busy_slot_steps",
     "slot_steps", "preemptions", "rejected", "restarts", "prefill_chunk",
+    "logical_blocks", "physical_blocks", "shared_block_hits",
+    "cow_copies", "kv_bytes_served", "kv_bytes_stored",
 ))
 
 
@@ -317,7 +325,10 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
     get conflated.  Chunked-prefill runs (``prefill_chunk > 1``) append a
     ``+prefill<C>`` segment — the chunked and token-by-token trajectories
     are different experiments (fewer fused steps, different TTFT), so the
-    gate must never compare one against the other's baseline."""
+    gate must never compare one against the other's baseline.  The same
+    reasoning forks ``+kv<dtype>`` for quantized KV pools (different
+    bytes/block, different accuracy budget) and ``+shared`` for
+    prefix-sharing runs (different physical-block trajectory)."""
     stats = report.get("stats") or {}
     chunk = int(report.get("prefill_chunk",
                            stats.get("prefill_chunk", 1)) or 1)
@@ -325,6 +336,12 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
            f"@{report.get('scheduler', stats.get('scheduler', '?'))}")
     if chunk > 1:
         key += f"+prefill{chunk}"
+    kv_dtype = str(report.get("kv_dtype",
+                              stats.get("kv_dtype", "f32")) or "f32")
+    if kv_dtype != "f32":
+        key += f"+kv{kv_dtype}"
+    if report.get("share_prefixes", stats.get("share_prefixes")):
+        key += "+shared"
     row = _serving_row(stats)
     # submit-time rejections live on the report, not in engine stats: the
     # engine never saw those requests (launch.serve counts them)

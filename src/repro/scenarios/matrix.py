@@ -185,16 +185,39 @@ class Scenario:
     slo: SLOSpec = SLOSpec()
     prefill_chunk: int = 1
     prefill_budget: Optional[int] = None
+    #: prefix-sharing axis: "none" = plain traffic, engine sharing off;
+    #: "shared" = shared-prefix traffic, COW engine sharing ON;
+    #: "shared-off" = the SAME shared-prefix traffic, sharing disabled
+    #: (the golden baseline a "shared" cell is diffed against)
+    prompt_sharing: str = "none"
+
+    def __post_init__(self):
+        if self.prompt_sharing not in ("none", "shared", "shared-off"):
+            raise ValueError(
+                f"unknown prompt_sharing {self.prompt_sharing!r}")
+
+    @property
+    def share_prefixes(self) -> bool:
+        """Whether the ENGINE deduplicates (the traffic *shape* is shared
+        for both "shared" and "shared-off")."""
+        return self.prompt_sharing == "shared"
 
     @property
     def traffic_key(self) -> str:
-        """Axes the sampled traffic depends on.  Scheduler, fault, and the
-        prefill-chunking axis are EXCLUDED so twins, cross-scheduler cells,
-        and chunked-vs-token-by-token cells all share a trace."""
-        return "/".join((
+        """Axes the sampled traffic depends on.  Scheduler, fault, the
+        prefill-chunking axis, and the sharing MODE are EXCLUDED so twins,
+        cross-scheduler cells, and chunked-vs-token-by-token cells all
+        share a trace.  The traffic *shape* (shared prefixes vs plain) is
+        included — it changes the sampled prompts — but "shared" and
+        "shared-off" collapse onto the same key, so the COW engine and its
+        sharing-disabled baseline serve byte-identical requests."""
+        parts = [
             self.arrival.slug, self.prompt.slug, self.eos.slug, self.arch,
             f"n{self.requests}", f"new{self.max_new}",
-        ))
+        ]
+        if self.prompt_sharing != "none":
+            parts.append("sharedpfx")
+        return "/".join(parts)
 
     @property
     def cell_id(self) -> str:
@@ -204,6 +227,8 @@ class Scenario:
         ]
         if self.prefill_chunk > 1:
             parts.append(f"pc{self.prefill_chunk}")
+        if self.prompt_sharing != "none":
+            parts.append(self.prompt_sharing)
         return "/".join(parts)
 
     @property
@@ -223,6 +248,15 @@ class Scenario:
         ``prefill_chunk=1``.  Chunked serving must match it uid-for-uid."""
         return dataclasses.replace(self, fault="none", prefill_chunk=1,
                                    prefill_budget=None)
+
+    def sharing_twin(self) -> "Scenario":
+        """The sharing-disabled golden twin of a COW-sharing cell: same
+        shared-prefix traffic (the sharing mode is outside the traffic
+        key), fault-free, ``prompt_sharing="shared-off"``.  The COW engine
+        must serve byte-identical streams while storing strictly fewer
+        physical blocks."""
+        return dataclasses.replace(self, fault="none",
+                                   prompt_sharing="shared-off")
 
 
 def cell_seed(spec_seed: int, traffic_key: str) -> int:
@@ -257,6 +291,12 @@ class MatrixSpec:
     prefill_chunks: List[int] = dataclasses.field(
         default_factory=lambda: [1])
     prefill_budget: Optional[int] = None
+    #: prefix-sharing axis ("none" / "shared" / "shared-off"): sharing
+    #: cells run continuous-only (the wave path has no block pool to
+    #: deduplicate); "shared" cells are golden-diffed against their
+    #: sharing-disabled twin by the runner
+    prompt_sharing: List[str] = dataclasses.field(
+        default_factory=lambda: ["none"])
     requests: int = 6
     max_new: int = 8
     max_batch: int = 2
@@ -267,42 +307,41 @@ class MatrixSpec:
 
     def cells(self) -> List[Scenario]:
         """Cartesian expansion, invalid (fault x scheduler) combos skipped."""
+        import itertools
+
         from repro.scenarios.faults import get_plan  # cycle-free at call time
 
         out: List[Scenario] = []
-        for arch in self.archs:
-            for sched in self.schedulers:
-                if sched not in SCHEDULERS:
-                    raise ValueError(f"unknown scheduler {sched!r}")
-                for arr in self.arrivals:
-                    for pr in self.prompts:
-                        for eo in self.eos:
-                            for fault in self.faults:
-                                for pc in self.prefill_chunks:
-                                    if pc > 1 and sched != "continuous":
-                                        continue  # wave has no chunked path
-                                    cell = Scenario(
-                                        arrival=arr, prompt=pr, eos=eo,
-                                        scheduler=sched, arch=arch,
-                                        fault=fault,
-                                        requests=self.requests,
-                                        max_new=self.max_new,
-                                        max_batch=self.max_batch,
-                                        max_len=self.max_len,
-                                        block_size=self.block_size,
-                                        seed=0, slo=self.slo,
-                                        prefill_chunk=pc,
-                                        prefill_budget=(
-                                            self.prefill_budget
-                                            if pc > 1 else None),
-                                    )
-                                    if not get_plan(fault).applies_to(cell):
-                                        continue
-                                    out.append(dataclasses.replace(
-                                        cell,
-                                        seed=cell_seed(self.seed,
-                                                       cell.traffic_key),
-                                    ))
+        for sched in self.schedulers:
+            if sched not in SCHEDULERS:
+                raise ValueError(f"unknown scheduler {sched!r}")
+        combos = itertools.product(
+            self.archs, self.schedulers, self.arrivals, self.prompts,
+            self.eos, self.faults, self.prefill_chunks, self.prompt_sharing,
+        )
+        for arch, sched, arr, pr, eo, fault, pc, ps in combos:
+            if pc > 1 and sched != "continuous":
+                continue  # wave has no chunked path
+            if ps != "none" and sched != "continuous":
+                continue  # wave has no block pool to deduplicate
+            cell = Scenario(
+                arrival=arr, prompt=pr, eos=eo,
+                scheduler=sched, arch=arch, fault=fault,
+                requests=self.requests,
+                max_new=self.max_new,
+                max_batch=self.max_batch,
+                max_len=self.max_len,
+                block_size=self.block_size,
+                seed=0, slo=self.slo,
+                prefill_chunk=pc,
+                prefill_budget=self.prefill_budget if pc > 1 else None,
+                prompt_sharing=ps,
+            )
+            if not get_plan(fault).applies_to(cell):
+                continue
+            out.append(dataclasses.replace(
+                cell, seed=cell_seed(self.seed, cell.traffic_key),
+            ))
         return out
 
     # -- JSON round-trip (spec files for the CLI) ---------------------------
@@ -373,6 +412,7 @@ def full_matrix() -> MatrixSpec:
         schedulers=list(SCHEDULERS),
         archs=list(SERVE_ARCHS),
         faults=["none", "preempt", "device-loss", "malformed"],
+        prompt_sharing=["none", "shared"],
         requests=8,
         max_new=8,
         max_batch=2,

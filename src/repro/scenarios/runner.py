@@ -126,6 +126,7 @@ def _execute_engine(cell: Scenario, cfg, params,
         scheduler=cell.scheduler, block_size=cell.block_size,
         prefill_chunk=cell.prefill_chunk,
         prefill_budget=cell.prefill_budget,
+        share_prefixes=cell.share_prefixes,
     )
     feeder = TrafficFeeder(trace)
     engine.add_step_hook(feeder)
@@ -185,6 +186,7 @@ def _execute_resilient(cell: Scenario, cfg, params,
             scheduler=cell.scheduler, block_size=cell.block_size,
             prefill_chunk=cell.prefill_chunk,
             prefill_budget=cell.prefill_budget,
+            share_prefixes=cell.share_prefixes,
         )
         feeder = TrafficFeeder(rebased)
         engine.add_step_hook(feeder)
@@ -232,17 +234,31 @@ def _execute_resilient(cell: Scenario, cfg, params,
     obs = [chunk_obs[i] for i in sorted(chunk_obs)]
     totals = {k: sum(o["stats"][k] for o in obs) for k in (
         "requests", "new_tokens", "fused_steps", "busy_slot_steps",
-        "slot_steps", "preemptions", "wall_s")}
+        "slot_steps", "preemptions", "wall_s",
+        "logical_blocks", "physical_blocks", "shared_block_hits",
+        "cow_copies", "kv_bytes_served", "kv_bytes_stored")}
     lats = [v for o in obs for v in o["lats"]]
     ttfts = [v for o in obs for v in o["ttfts"]]
     ttft_steps = [float(v) for o in obs for v in o["ttft_steps"]]
     rej = [r for i in sorted(rejected) for r in rejected[i]]
+    from repro.core import metrics as core_metrics
+
     stats = {
         "scheduler": cell.scheduler,
         "prefill_chunk": cell.prefill_chunk,
+        "share_prefixes": cell.share_prefixes,
         **{k: totals[k] for k in ("requests", "new_tokens", "fused_steps",
                                   "busy_slot_steps", "slot_steps",
-                                  "preemptions")},
+                                  "preemptions", "logical_blocks",
+                                  "physical_blocks", "shared_block_hits",
+                                  "cow_copies", "kv_bytes_served",
+                                  "kv_bytes_stored")},
+        # block-granular fallback for pure-SSM archs (zero paged KV bytes)
+        "block_dedup_ratio": core_metrics.block_dedup_ratio(
+            totals["kv_bytes_served"], totals["kv_bytes_stored"]
+        ) if totals["kv_bytes_stored"] > 0 else
+        core_metrics.block_dedup_ratio(
+            totals["logical_blocks"], totals["physical_blocks"]),
         "slot_utilization": (totals["busy_slot_steps"] / totals["slot_steps"]
                              if totals["slot_steps"] else 0.0),
         "wall_s": totals["wall_s"],
@@ -310,6 +326,7 @@ class CellResult:
             "fault": self.cell.fault,
             "prefill_chunk": self.cell.prefill_chunk,
             "prefill_budget": self.cell.prefill_budget,
+            "prompt_sharing": self.cell.prompt_sharing,
             "seed": self.cell.seed,
             "ok": self.ok,
             "stats": self.stats,
@@ -376,6 +393,31 @@ def run_cell(cell: Scenario, *, check_twin: bool = True) -> CellResult:
             f"[vs prefill_chunk=1] {d}"
             for d in _diff_tokens(result.tokens, ctwin.tokens)
         ]
+    if cell.prompt_sharing == "shared" and check_twin:
+        # the sharing axis gets golden treatment too: the COW engine must
+        # serve the sharing-disabled twin's exact streams while actually
+        # deduplicating (strictly fewer physical blocks, dedup ratio > 1)
+        try:
+            stwin = _execute(cell.sharing_twin(), inject=False)
+        except Exception as e:  # noqa: BLE001
+            result.error = f"sharing twin failed: {type(e).__name__}: {e}"
+            return result
+        result.golden_checked = True
+        result.golden_diffs += [
+            f"[vs sharing-off] {d}"
+            for d in _diff_tokens(result.tokens, stwin.tokens)
+        ]
+        mine = result.stats.get("physical_blocks")
+        base = stwin.stats.get("physical_blocks")
+        if mine is not None and base is not None and not mine < base:
+            result.golden_diffs.append(
+                f"[vs sharing-off] physical blocks not reduced "
+                f"({mine} vs {base})")
+        if float(result.stats.get("block_dedup_ratio", 1.0)) <= 1.0:
+            result.golden_diffs.append(
+                "[vs sharing-off] block_dedup_ratio "
+                f"{result.stats.get('block_dedup_ratio')} <= 1 on "
+                "shared-prefix traffic")
     result.slo_failures = cell.slo.check(result.stats)
     return result
 

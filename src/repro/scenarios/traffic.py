@@ -68,20 +68,58 @@ def _stop_cap(spec: EosSpec, max_new: int, rng: np.random.Generator) -> int:
     return min(max_new, int(rng.geometric(spec.p_early)))
 
 
+#: Prefix pools per shared-prefix cell and the unique-tail length bounds:
+#: bimodal traffic — every request takes one of two long shared prefixes
+#: and appends a short unique tail, the shape prefix caching feeds on.
+_SHARED_GROUPS = 2
+_TAIL_LO, _TAIL_HI = 1, 2
+
+
+def _shared_prompts(cell: Scenario, vocab: int,
+                    rng: np.random.Generator) -> List[np.ndarray]:
+    """Per-uid prompts for a shared-prefix cell, FIXED draw order: group
+    prefixes first (one per pool), then per-uid (group, tail length, tail
+    tokens).  Prefix lengths come from the cell's prompt distribution,
+    clamped so prefix + longest tail + budget always fits the slot cache;
+    tails are unique per uid, so streams diverge right where copy-on-write
+    must fork the last shared block."""
+    room = cell.max_len - cell.max_new - _TAIL_HI
+    groups = []
+    for _ in range(_SHARED_GROUPS):
+        plen = max(1, min(_prompt_len(cell.prompt, rng), room))
+        groups.append(rng.integers(0, vocab, size=plen).astype(np.int32))
+    prompts = []
+    for _ in range(cell.requests):
+        g = int(rng.integers(0, len(groups)))
+        tail_len = int(rng.integers(_TAIL_LO, _TAIL_HI + 1))
+        tail = rng.integers(0, vocab, size=tail_len).astype(np.int32)
+        prompts.append(np.concatenate([groups[g], tail]))
+    return prompts
+
+
 def sample_trace(cell: Scenario, vocab: int) -> List[RequestSpec]:
     """The cell's reproducible request trace, sorted by arrival step.
 
     Prompt lengths are clamped so prompt + budget always fits the
     per-slot cache — well-formed by construction; the *malformed* fault
-    plan injects its violations explicitly on top.
+    plan injects its violations explicitly on top.  Shared-prefix cells
+    (``prompt_sharing != "none"``) draw bimodal shared-prefix prompts —
+    identical between "shared" and "shared-off" (the sharing MODE is
+    outside the traffic key), so the COW engine and its baseline twin
+    serve the same bytes.
     """
     rng = np.random.default_rng(cell.seed)
     arrivals = _arrival_steps(cell.arrival, cell.requests, rng)
+    shared = (getattr(cell, "prompt_sharing", "none") != "none")
+    prompts = _shared_prompts(cell, vocab, rng) if shared else None
     out: List[RequestSpec] = []
     for uid in range(cell.requests):
-        plen = _prompt_len(cell.prompt, rng)
-        plen = max(1, min(plen, cell.max_len - cell.max_new))
-        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        if shared:
+            prompt = prompts[uid]
+        else:
+            plen = _prompt_len(cell.prompt, rng)
+            plen = max(1, min(plen, cell.max_len - cell.max_new))
+            prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
         out.append(RequestSpec(
             uid=uid,
             arrive_step=int(arrivals[uid]),

@@ -64,6 +64,7 @@ import numpy as np
 from repro.configs.base import LayerKind, ModelConfig
 from repro.core import metrics as core_metrics
 from repro.models import transformer
+from repro.serve.block_pool import BlockPool
 
 SCHEDULERS = ("continuous", "wave")
 
@@ -108,21 +109,22 @@ def _jit_decode(cfg: ModelConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_decode_paged(cfg: ModelConfig, block_size: int):
+def _jit_decode_paged(cfg: ModelConfig, block_size: int, kv_dtype: str):
     return jax.jit(
         lambda p, t, c, pos, bt: transformer.decode_step_paged(
-            p, cfg, t, c, pos, bt, block_size=block_size
+            p, cfg, t, c, pos, bt, block_size=block_size, kv_dtype=kv_dtype
         )
     )
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_prefill_paged(cfg: ModelConfig, block_size: int):
+def _jit_prefill_paged(cfg: ModelConfig, block_size: int, kv_dtype: str):
     """Fused chunked-prefill step (chunk width is baked into the token
     array's shape, so each (config, block_size, chunk) traces once)."""
     return jax.jit(
         lambda p, t, c, pos, bt, lens: transformer.prefill_step_paged(
-            p, cfg, t, c, pos, bt, lens, block_size=block_size
+            p, cfg, t, c, pos, bt, lens, block_size=block_size,
+            kv_dtype=kv_dtype
         )
     )
 
@@ -130,6 +132,13 @@ def _jit_prefill_paged(cfg: ModelConfig, block_size: int):
 @functools.lru_cache(maxsize=1)
 def _jit_reset_slots():
     return jax.jit(transformer.reset_paged_slots)
+
+
+@functools.lru_cache(maxsize=1)
+def _jit_copy_block():
+    """COW device copy (src/dst are traced scalars: one trace per cache
+    structure serves every copy)."""
+    return jax.jit(transformer.copy_paged_block)
 
 
 class RequestTooLong(ValueError):
@@ -190,7 +199,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, scheduler: str = "continuous",
                  block_size: int = 16, prefill_chunk: int = 1,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 kv_dtype: str = "f32", share_prefixes: bool = False):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
                              f"got {scheduler!r}")
@@ -209,6 +219,21 @@ class ServeEngine:
             raise ValueError(
                 f"prefill_budget must be >= 1 (or None), got {prefill_budget}"
             )
+        if kv_dtype not in transformer.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {transformer.KV_DTYPES}, "
+                f"got {kv_dtype!r}"
+            )
+        if kv_dtype != "f32" and scheduler != "continuous":
+            raise ValueError(
+                "quantized KV blocks require the continuous scheduler; "
+                "wave mode serves from the dense unquantized cache"
+            )
+        if share_prefixes and scheduler != "continuous":
+            raise ValueError(
+                "prefix sharing requires the continuous scheduler's "
+                "paged block pool"
+            )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -217,6 +242,8 @@ class ServeEngine:
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget
+        self.kv_dtype = kv_dtype
+        self.share_prefixes = share_prefixes
         self.queue: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
         # slot accounting (Eq. 1 analogue): fused steps are vector issues,
@@ -225,15 +252,23 @@ class ServeEngine:
         self.busy_slot_steps = 0
         self.wall_s = 0.0
         self.preemptions = 0
+        # block-pool dedup accounting, accumulated across drains (see
+        # repro.serve.block_pool): served vs stored block-spans, prefix
+        # hits, and copy-on-write divergences
+        self.logical_blocks = 0
+        self.physical_blocks = 0
+        self.shared_block_hits = 0
+        self.cow_copies = 0
         #: step hooks (see module docstring): traffic feeders, fault plans
         self.step_hooks: List[StepHook] = []
         #: uid -> physical block ids the request occupied, in allocation
         #: order (pool-reuse introspection; continuous scheduler only)
         self.block_history: Dict[int, List[int]] = {}
         self._decode = _jit_decode(cfg)
-        self._decode_paged = _jit_decode_paged(cfg, block_size)
-        self._prefill_paged = _jit_prefill_paged(cfg, block_size)
+        self._decode_paged = _jit_decode_paged(cfg, block_size, kv_dtype)
+        self._prefill_paged = _jit_prefill_paged(cfg, block_size, kv_dtype)
         self._reset_slots = _jit_reset_slots()
+        self._copy_block = _jit_copy_block()
         self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
         # token-work budget for the drain-loop runaway guard: grows with
         # every submit (and preemption replay), so hook-fed traffic gets
@@ -292,7 +327,7 @@ class ServeEngine:
             jax.block_until_ready(out[0])
             return
         cache = transformer.init_paged_cache(
-            self.cfg, B, self.max_len, self.block_size
+            self.cfg, B, self.max_len, self.block_size, self.kv_dtype
         )
         pos = jnp.zeros((B,), jnp.int32)
         bt = jnp.zeros((B, self.max_len // self.block_size), jnp.int32)
@@ -322,6 +357,14 @@ class ServeEngine:
         for hook in self.step_hooks:
             pending = bool(hook(self, busy)) or pending
         return pending
+
+    def _absorb_pool(self, pool: BlockPool) -> None:
+        """Fold one drain's block-pool dedup counters into the engine's
+        (each ``run_until_drained`` builds a fresh cache and pool)."""
+        self.logical_blocks += pool.logical_blocks
+        self.physical_blocks += pool.physical_blocks
+        self.shared_block_hits += pool.shared_hits
+        self.cow_copies += pool.cow_copies
 
     def _finish(self, req: Request) -> None:
         req.done = True
@@ -353,7 +396,7 @@ class ServeEngine:
                 "continuous scheduler is draining"
             )
         slot_req, positions = live["slot_req"], live["positions"]
-        block_tables, free = live["block_tables"], live["free"]
+        block_tables, pool = live["block_tables"], live["pool"]
         if uid is not None:
             picks = [b for b, r in enumerate(slot_req)
                      if r is not None and r.uid == uid]
@@ -368,9 +411,11 @@ class ServeEngine:
         req = slot_req[b]
         # replay budget: the resumed run re-spends prompt + generated steps
         self._submitted_work += len(req.prompt) + req.max_new_tokens
+        # decref, never free: a prefix-shared block may still back another
+        # slot's cache — it returns to the free list only at refcount 0
         for j in range(block_tables.shape[1]):
             if block_tables[b, j] != 0:
-                free.appendleft(int(block_tables[b, j]))
+                pool.decref(int(block_tables[b, j]))
         block_tables[b] = 0
         positions[b] = 0
         live["tokens"][b, :] = 0
@@ -448,16 +493,20 @@ class ServeEngine:
     def _drain_continuous(self, max_steps: Optional[int]) -> None:
         B, bs = self.max_batch, self.block_size
         nb_slot = self.max_len // bs
-        cache = transformer.init_paged_cache(self.cfg, B, self.max_len, bs)
+        cache = transformer.init_paged_cache(
+            self.cfg, B, self.max_len, bs, self.kv_dtype
+        )
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
-        free: Deque[int] = deque(range(1, 1 + B * nb_slot))
+        pool = BlockPool(1 + B * nb_slot, bs,
+                         share_prefixes=self.share_prefixes)
         slot_req: List[Optional[Request]] = [None] * B
         tokens = np.zeros((B, 1), np.int32)
         reset_mask = np.zeros(B, bool)
         self._live = {
             "positions": positions, "block_tables": block_tables,
-            "free": free, "slot_req": slot_req, "tokens": tokens,
+            "free": pool.free, "pool": pool, "slot_req": slot_req,
+            "tokens": tokens,
         }
         idle_spins = 0
 
@@ -496,14 +545,32 @@ class ServeEngine:
                 if self.steps >= budget:
                     raise RuntimeError("serve loop did not drain")
                 # allocate the write block for any slot whose position entered
-                # an unmapped logical block (covers fresh admissions at 0 too)
+                # an unmapped logical block (covers fresh admissions at 0 too);
+                # with sharing on, acquire() may return another slot's block
+                # holding the same exact prompt chain instead of a fresh one
                 for b, r in enumerate(slot_req):
                     if r is not None:
                         j = positions[b] // bs
                         if block_tables[b, j] == 0:
-                            blk = free.popleft()
+                            blk = pool.acquire(r.prompt, j)
                             block_tables[b, j] = blk
                             self.block_history.setdefault(r.uid, []).append(blk)
+                        # copy-on-write: a generated-token row diverges the
+                        # block's content, so a block other slots still
+                        # reference gets a private copy first (prompt rows
+                        # write through — sharers write identical bytes)
+                        if (positions[b] >= len(r.prompt)
+                                and pool.refcount_of(
+                                    int(block_tables[b, j])) > 1):
+                            old = int(block_tables[b, j])
+                            new = pool.cow(old)
+                            cache = self._copy_block(
+                                cache, jnp.int32(old), jnp.int32(new)
+                            )
+                            block_tables[b, j] = new
+                            self.block_history.setdefault(
+                                r.uid, []
+                            ).append(new)
                 if self._has_state and reset_mask.any():
                     cache = self._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False
@@ -540,16 +607,18 @@ class ServeEngine:
                     if (len(r.generated) >= r.max_new_tokens
                             or tok == r.eos_id):
                         self._finish(r)
-                        # free the slot's blocks back to the pool (LIFO: the
-                        # next admission reuses this request's blocks first)
+                        # release the slot's blocks (LIFO: the next admission
+                        # reuses this request's blocks first); shared blocks
+                        # survive under their other referents' refcounts
                         for j in range(nb_slot):
                             if block_tables[b, j] != 0:
-                                free.appendleft(int(block_tables[b, j]))
+                                pool.decref(int(block_tables[b, j]))
                         block_tables[b] = 0
                         positions[b] = 0
                         tokens[b, 0] = 0
                         slot_req[b] = None
         finally:
+            self._absorb_pool(pool)
             self._live = None
 
     # -- continuous scheduler, chunked prefill (prefill/decode disaggregation) -
@@ -577,17 +646,21 @@ class ServeEngine:
         """
         B, bs, C = self.max_batch, self.block_size, self.prefill_chunk
         nb_slot = self.max_len // bs
-        cache = transformer.init_paged_cache(self.cfg, B, self.max_len, bs)
+        cache = transformer.init_paged_cache(
+            self.cfg, B, self.max_len, bs, self.kv_dtype
+        )
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
-        free: Deque[int] = deque(range(1, 1 + B * nb_slot))
+        pool = BlockPool(1 + B * nb_slot, bs,
+                         share_prefixes=self.share_prefixes)
         slot_req: List[Optional[Request]] = [None] * B
         tokens = np.zeros((B, C), np.int32)
         lengths = np.zeros(B, np.int32)
         reset_mask = np.zeros(B, bool)
         self._live = {
             "positions": positions, "block_tables": block_tables,
-            "free": free, "slot_req": slot_req, "tokens": tokens,
+            "free": pool.free, "pool": pool, "slot_req": slot_req,
+            "tokens": tokens,
         }
         idle_spins = 0
 
@@ -650,11 +723,27 @@ class ServeEngine:
                     lengths[b] = n_b
                     for j in range(t0 // bs, (t0 + n_b - 1) // bs + 1):
                         if block_tables[b, j] == 0:
-                            blk = free.popleft()
+                            blk = pool.acquire(r.prompt, j)
                             block_tables[b, j] = blk
                             self.block_history.setdefault(
                                 r.uid, []
                             ).append(blk)
+                    # copy-on-write for any block receiving a generated-token
+                    # row this step while other slots still reference it
+                    gen_from = max(t0, len(r.prompt))
+                    if gen_from < t0 + n_b:
+                        for j in range(gen_from // bs,
+                                       (t0 + n_b - 1) // bs + 1):
+                            old = int(block_tables[b, j])
+                            if pool.refcount_of(old) > 1:
+                                new = pool.cow(old)
+                                cache = self._copy_block(
+                                    cache, jnp.int32(old), jnp.int32(new)
+                                )
+                                block_tables[b, j] = new
+                                self.block_history.setdefault(
+                                    r.uid, []
+                                ).append(new)
                 if self._has_state and reset_mask.any():
                     cache = self._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False
@@ -710,12 +799,13 @@ class ServeEngine:
                         self._finish(r)
                         for j in range(nb_slot):
                             if block_tables[b, j] != 0:
-                                free.appendleft(int(block_tables[b, j]))
+                                pool.decref(int(block_tables[b, j]))
                         block_tables[b] = 0
                         positions[b] = 0
                         tokens[b, :] = 0
                         slot_req[b] = None
         finally:
+            self._absorb_pool(pool)
             self._live = None
 
     # -- public ----------------------------------------------------------------
@@ -749,10 +839,17 @@ class ServeEngine:
             if r.ttft_steps is not None
         )
         new_tokens = sum(len(r.generated) for r in self.completed.values())
+        block_bytes = transformer.paged_block_bytes(
+            self.cfg, self.block_size, self.kv_dtype
+        )
+        kv_bytes_served = self.logical_blocks * block_bytes
+        kv_bytes_stored = self.physical_blocks * block_bytes
         return {
             "scheduler": self.scheduler,
             "prefill_chunk": self.prefill_chunk,
             "prefill_budget": self.prefill_budget,
+            "kv_dtype": self.kv_dtype,
+            "share_prefixes": self.share_prefixes,
             "requests": len(self.completed),
             "new_tokens": new_tokens,
             "fused_steps": self.steps,
@@ -760,6 +857,22 @@ class ServeEngine:
             "slot_steps": self.total_slot_steps,
             "slot_utilization": self.slot_utilization,
             "preemptions": self.preemptions,
+            # block-pool dedup: bytes served / bytes stored is the
+            # memory-side Eq. 1 analogue (see core.metrics.block_dedup_ratio)
+            "logical_blocks": self.logical_blocks,
+            "physical_blocks": self.physical_blocks,
+            "shared_block_hits": self.shared_block_hits,
+            "cow_copies": self.cow_copies,
+            "kv_bytes_served": kv_bytes_served,
+            "kv_bytes_stored": kv_bytes_stored,
+            # pure-SSM models page zero KV bytes; fall back to block-
+            # granular units there so sharing still registers (the ratio
+            # is unit-agnostic: served / stored)
+            "block_dedup_ratio": core_metrics.block_dedup_ratio(
+                kv_bytes_served, kv_bytes_stored
+            ) if block_bytes > 0 else core_metrics.block_dedup_ratio(
+                self.logical_blocks, self.physical_blocks
+            ),
             "wall_s": self.wall_s,
             "tok_s": new_tokens / self.wall_s if self.wall_s > 0 else 0.0,
             "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,

@@ -395,3 +395,79 @@ def flash_prefill_space() -> TuningSpace:
         traffic_model=_fp_traffic,
         flops_model=_fp_flops,
     )
+
+
+# ---------------------------------------------------------------------------
+# Paged-KV storage dtype — the ELEN axis of the serve-path block pool
+# ---------------------------------------------------------------------------
+#
+# args convention = the paged decode call: (q (B,KV,G,D),
+# k_pool (n_blocks,bs,KV,D), v_pool, block_tables (B,nb), valid_len (B,)).
+#
+# Unlike the per-kernel ``dtypes`` tuple (which casts the COMPUTE operands,
+# paper Eq. 1 applied to the arithmetic), ``kv_dtype`` narrows only the
+# STORED cache: queries and the softmax stay at the compute dtype while
+# each KV tile DMAs at 1/2 (bf16) or 1/4 (int8, plus one fp32 scale per
+# row) of the f32 bytes and is widened in VMEM.  The tuner must therefore
+# never cast the example operands for this axis — it is a distinct static
+# argument of the serve path (``ServeEngine(kv_dtype=...)``), searched by
+# the accuracy-vs-speed sweep, not by operand substitution.
+
+#: Pool bytes per stored element for each kv_dtype candidate.
+KV_DTYPE_ITEMSIZE: Dict[str, int] = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def _kv_dims(args: Tuple) -> Tuple[int, int, int, int, int]:
+    q, k_pool = args[0], args[1]
+    B, KV, G, D = q.shape
+    return B, KV, G, D, k_pool.shape[1]
+
+
+def _kv_traffic(cfg: Dict[str, Any], args: Tuple) -> float:
+    """Decode-step HBM traffic: live K+V rows stream at the pool itemsize
+    (int8 adds the two fp32 scale rows per block); q/out traffic is at the
+    compute dtype and independent of the axis."""
+    import numpy as np
+
+    B, KV, G, D, bs = _kv_dims(args)
+    kv_dtype = cfg["kv_dtype"]
+    item = KV_DTYPE_ITEMSIZE[kv_dtype]
+    live = float(np.sum(np.asarray(args[4])))
+    kv_bytes = 2.0 * live * KV * D * item
+    if kv_dtype == "int8":
+        kv_bytes += 2.0 * live * 4.0  # per-row fp32 scales
+    q_bytes = 2.0 * B * KV * G * D * args[0].dtype.itemsize
+    return kv_bytes + q_bytes
+
+
+def _kv_vmem(cfg: Dict[str, Any], args: Tuple, dtype_bytes: int) -> float:
+    """One pool block of K+V at the storage dtype, widened tile + q + acc
+    at fp32 (dequant happens in VMEM, so both copies are resident)."""
+    _, _, G, D, bs = _kv_dims(args)
+    item = KV_DTYPE_ITEMSIZE[cfg["kv_dtype"]]
+    return float(2 * bs * D * (item + 4) + 2 * G * D * 4)
+
+
+def _kv_flops(args: Tuple) -> float:
+    import numpy as np
+
+    _, KV, G, D, _ = _kv_dims(args)
+    live = float(np.sum(np.asarray(args[4])))
+    return 4.0 * KV * G * D * live
+
+
+def paged_kv_space() -> TuningSpace:
+    """The ``kv_dtype`` axis of the paged serve path (quantized paging).
+
+    Candidates are ordered widest-first so ``subset(1)`` (the CI tiny-space
+    knob) keeps the exact f32 baseline.  ``dtypes`` is deliberately empty:
+    the axis is a static serve-path argument, not an operand cast."""
+    return TuningSpace(
+        kernel="paged-kv",
+        axes={"kv_dtype": ("f32", "bf16", "int8")},
+        default={"kv_dtype": "f32"},
+        dtypes=(),
+        vmem_model=_kv_vmem,
+        traffic_model=_kv_traffic,
+        flops_model=_kv_flops,
+    )

@@ -255,6 +255,145 @@ def test_flash_decode_paged_stale_blocks_are_inert():
 
 
 # ---------------------------------------------------------------------------
+# quantized paging (the ELEN axis): int8 / bf16 pools vs the f32 oracle
+# ---------------------------------------------------------------------------
+
+
+def _quantized_paged_setup(B, KV, D, bs, nb, seed=0):
+    """f32 pools + their per-row int8 quantization (kernel commit formula)."""
+    k_pool, v_pool, bt, kq = _paged_setup(B, KV, D, bs, nb, seed=seed)
+    kq8, ks = fdr.quantize_rows(k_pool)
+    vq8, vs = fdr.quantize_rows(v_pool)
+    return k_pool, v_pool, kq8, vq8, ks, vs, bt, kq
+
+
+@pytest.mark.parametrize("B,KV,G,D,bs,nb", [
+    (1, 1, 1, 16, 8, 4),
+    (3, 2, 2, 16, 4, 6),
+    (2, 4, 2, 32, 16, 2),
+])
+def test_flash_decode_paged_int8_matches_ref(B, KV, G, D, bs, nb):
+    """Kernel-side per-tile dequant == whole-array ref dequant (tight),
+    and both stay within quantization error of the f32 pools (loose)."""
+    k_pool, v_pool, kq8, vq8, ks, vs, bt, kq = _quantized_paged_setup(
+        B, KV, D, bs, nb)
+    q = jax.random.normal(kq, (B, KV, G, D), jnp.float32)
+    valid = jax.random.randint(jax.random.PRNGKey(7), (B,), 1, nb * bs + 1)
+    out = fdk.flash_decode_paged(q, kq8, vq8, bt, valid,
+                                 k_scale=ks, v_scale=vs)
+    ref = fdr.decode_paged_ref(q, kq8, vq8, bt, valid,
+                               k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+    f32 = fdr.decode_paged_ref(q, k_pool, v_pool, bt, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f32), atol=0.08)
+
+
+def test_flash_decode_paged_bf16_matches_ref():
+    """bf16 pools (no scales) widen in VMEM; output within bf16 error of
+    the f32 oracle."""
+    B, KV, G, D, bs, nb = 2, 2, 2, 16, 8, 4
+    k_pool, v_pool, bt, kq = _paged_setup(B, KV, D, bs, nb, seed=2)
+    q = jax.random.normal(kq, (B, KV, G, D), jnp.float32)
+    valid = jnp.asarray([9, 25], jnp.int32)
+    out = fdk.flash_decode_paged(q, k_pool.astype(jnp.bfloat16),
+                                 v_pool.astype(jnp.bfloat16), bt, valid)
+    f32 = fdr.decode_paged_ref(q, k_pool, v_pool, bt, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f32), atol=0.03)
+
+
+def test_flash_decode_paged_int8_rejects_lone_scale():
+    k_pool, v_pool, kq8, vq8, ks, vs, bt, kq = _quantized_paged_setup(
+        1, 1, 16, 8, 4)
+    q = jax.random.normal(kq, (1, 1, 1, 16), jnp.float32)
+    valid = jnp.asarray([5], jnp.int32)
+    with pytest.raises(ValueError):
+        fdk.flash_decode_paged(q, kq8, vq8, bt, valid, k_scale=ks)
+
+
+def test_flash_decode_paged_int8_stale_blocks_are_inert():
+    """The f32 stale-block sweep, on quantized pools: poisoning int8 rows
+    AND their scales past valid_len cannot change the output — length
+    predication must mask before dequantization, not after."""
+    B, KV, G, D, bs, nb = 2, 2, 2, 16, 4, 4
+    _, _, kq8, vq8, ks, vs, bt, kq = _quantized_paged_setup(
+        B, KV, D, bs, nb, seed=5)
+    q = jax.random.normal(kq, (B, KV, G, D), jnp.float32)
+    valid = jnp.asarray([6, 11], jnp.int32)
+    out1 = fdk.flash_decode_paged(q, kq8, vq8, bt, valid,
+                                  k_scale=ks, v_scale=vs)
+    kp, vp = np.asarray(kq8).copy(), np.asarray(vq8).copy()
+    ksp, vsp = np.asarray(ks).copy(), np.asarray(vs).copy()
+    for b in range(B):
+        for j in range(nb):
+            for o in range(bs):
+                if j * bs + o >= int(valid[b]):
+                    kp[int(bt[b, j]), o] = 127
+                    vp[int(bt[b, j]), o] = -127
+                    ksp[int(bt[b, j]), o] = 99.0
+                    vsp[int(bt[b, j]), o] = 99.0
+    out2 = fdk.flash_decode_paged(
+        q, jnp.asarray(kp), jnp.asarray(vp), bt, valid,
+        k_scale=jnp.asarray(ksp), v_scale=jnp.asarray(vsp))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,C,KV,G,D,bs,nb,bc,bks", [
+    (1, 8, 1, 1, 16, 8, 4, 8, 0),
+    (2, 8, 2, 2, 16, 8, 6, 4, 8),
+    (3, 4, 1, 2, 16, 4, 8, 2, 4),
+])
+def test_flash_prefill_paged_int8_matches_ref(B, C, KV, G, D, bs, nb,
+                                              bc, bks):
+    """Quantized chunked prefill: the commit kernel's int8 rows and
+    scales must be BIT-identical to the ref formula (same quantizer), and
+    the attended output must match the dequantizing oracle."""
+    n_blocks = 1 + B * nb
+    keys = jax.random.split(jax.random.PRNGKey(11), 5)
+    kq8, ks = fdr.quantize_rows(
+        jax.random.normal(keys[0], (n_blocks, bs, KV, D), jnp.float32))
+    vq8, vs = fdr.quantize_rows(
+        jax.random.normal(keys[1], (n_blocks, bs, KV, D), jnp.float32))
+    perm = np.random.default_rng(11).permutation(np.arange(1, n_blocks))
+    bt = jnp.asarray(perm[: B * nb].reshape(B, nb).astype(np.int32))
+    k_new = jax.random.normal(keys[2], (B, C, KV, D), jnp.float32)
+    v_new = jax.random.normal(keys[3], (B, C, KV, D), jnp.float32)
+    starts = np.random.default_rng(12).integers(0, nb * bs - C + 1, B)
+    q_start = jnp.asarray(starts.astype(np.int32))
+    q = jax.random.normal(keys[4], (B, C, KV, G, D), jnp.float32)
+    q_len = jax.random.randint(jax.random.PRNGKey(9), (B,), 1, C + 1)
+
+    out, kp2, vp2, ks2, vs2 = fdk.flash_prefill_paged(
+        q, k_new, v_new, kq8, vq8, bt, q_start, q_len,
+        k_scale=ks, v_scale=vs, block_c=bc, block_s=bks)
+    rout, rkp, rvp, rks, rvs = fdr.prefill_paged_ref(
+        q, k_new, v_new, kq8, vq8, bt, q_start, q_len,
+        k_scale=ks, v_scale=vs)
+    # compare through the block tables: unreferenced blocks are undefined
+    for b in range(B):
+        for j in range(nb):
+            blk = int(bt[b, j])
+            np.testing.assert_array_equal(
+                np.asarray(kp2)[blk], np.asarray(rkp)[blk],
+                err_msg=f"k block {blk}")
+            np.testing.assert_array_equal(
+                np.asarray(vp2)[blk], np.asarray(rvp)[blk],
+                err_msg=f"v block {blk}")
+            np.testing.assert_allclose(
+                np.asarray(ks2)[blk], np.asarray(rks)[blk], rtol=1e-6,
+                err_msg=f"k scale {blk}")
+            np.testing.assert_allclose(
+                np.asarray(vs2)[blk], np.asarray(rvs)[blk], rtol=1e-6,
+                err_msg=f"v scale {blk}")
+    for b in range(B):
+        n = int(q_len[b])
+        np.testing.assert_allclose(
+            np.asarray(out)[b, :n], np.asarray(rout)[b, :n],
+            rtol=3e-5, atol=3e-5, err_msg=f"slot {b}")
+
+
+# ---------------------------------------------------------------------------
 # QC RX gate
 # ---------------------------------------------------------------------------
 

@@ -421,6 +421,85 @@ def test_smoke_matrix_unaffected_by_prefill_axis():
         assert "pc" not in c.cell_id
 
 
+def test_sharing_axis_expansion_and_shared_traffic():
+    """The prompt_sharing axis expands only under the continuous
+    scheduler, tags cell ids, keeps the sharing MODE out of the traffic
+    key ("shared" and "shared-off" serve byte-identical requests) while
+    the traffic SHAPE (bimodal shared prefixes) is in it."""
+    spec = _tiny_matrix(schedulers=["continuous", "wave"],
+                        prompt_sharing=["none", "shared"])
+    cells = spec.cells()
+    cont = [c for c in cells if c.scheduler == "continuous"]
+    wave = [c for c in cells if c.scheduler == "wave"]
+    assert sorted(c.prompt_sharing for c in cont) == ["none", "shared"]
+    assert [c.prompt_sharing for c in wave] == ["none"]
+    shared, = [c for c in cont if c.prompt_sharing == "shared"]
+    plain, = [c for c in cont if c.prompt_sharing == "none"]
+    assert shared.cell_id.endswith("/shared")
+    assert "shared" not in plain.cell_id
+    assert shared.share_prefixes and not plain.share_prefixes
+    # the twin: same seed, fault-free, sharing disabled on the SAME trace
+    twin = shared.sharing_twin()
+    assert twin.prompt_sharing == "shared-off" and twin.fault == "none"
+    assert twin.seed == shared.seed
+    assert not twin.share_prefixes
+    t_on = sample_trace(shared, vocab=256)
+    t_off = sample_trace(twin, vocab=256)
+    for a, b in zip(t_on, t_off):
+        assert (a.uid, a.arrive_step, a.max_new_tokens) == (
+            b.uid, b.arrive_step, b.max_new_tokens)
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+    # shared-prefix traffic differs from the plain cell's (shape is keyed)
+    assert shared.seed != plain.seed
+    # bimodal by construction: at most 2 distinct prompt prefixes
+    firsts = {tuple(r.prompt[:4]) for r in t_on}
+    assert len(firsts) <= 2, firsts
+
+
+def test_shared_cell_matches_sharing_off_twin_with_fewer_blocks():
+    """A shared-prefix cell runs against its sharing-off twin: identical
+    streams (golden), strictly fewer physical blocks, dedup > 1 — and the
+    ledger row lands under the sharing-tagged scenario key."""
+    spec = _tiny_matrix(prompt_sharing=["shared"],
+                        prompts=[PromptSpec(kind="uniform", lo=8, hi=14)])
+    cell, = spec.cells()
+    r = run_cell(cell)
+    assert r.error == ""
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["share_prefixes"] is True
+    assert r.stats["shared_block_hits"] > 0
+    assert r.stats["block_dedup_ratio"] > 1.0
+    rep = r.report()
+    assert rep["prompt_sharing"] == "shared"
+    metrics = metrics_from_scenario(rep)
+    (key, row), = metrics.items()
+    assert key.endswith("/shared")
+    assert row["block_dedup_ratio"] > 1.0
+    assert row["physical_blocks"] < row["logical_blocks"]
+
+
+def test_shared_preempt_cell_matches_both_twins():
+    """Sharing + mid-flight preemption: the preempted COW cell must match
+    its fault-free golden twin AND its sharing-off twin — the decref-not-
+    free preemption contract under shared blocks, end to end."""
+    spec = _tiny_matrix(faults=["preempt"], prompt_sharing=["shared"],
+                        prompts=[PromptSpec(kind="uniform", lo=8, hi=14)])
+    cell, = spec.cells()
+    r = run_cell(cell)
+    assert r.error == ""
+    assert r.stats["preemptions"] >= 1
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["block_dedup_ratio"] > 1.0
+
+
+def test_smoke_matrix_unaffected_by_sharing_axis():
+    """The CI smoke matrix keeps sharing off with the exact same cell ids
+    and seeds as before the axis existed."""
+    for c in smoke_matrix().cells():
+        assert c.prompt_sharing == "none" and not c.share_prefixes
+        assert not c.cell_id.endswith("/shared")
+
+
 def test_cli_gate_fails_on_no_match():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.scenarios", "gate",

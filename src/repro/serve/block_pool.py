@@ -31,7 +31,14 @@ the joiner only ever *reads* rows below its own prompt length, which the
 registrant wrote as prompt rows, and any write past a prompt is a
 generated row and therefore COWs.  The reverse (``t`` longer than ``T``)
 is rejected — the extra rows would collide with the registrant's
-generated tokens.
+generated tokens.  Partial-tail sharing makes one more hook necessary:
+once the registrant decrefs away, the shorter-tailed sharer owns the
+block alone (refcount 1), so its generated rows land IN PLACE — rows the
+registered key still claims as prompt content.  The engine therefore
+calls :meth:`note_generated_write` on every in-place generated write,
+which trims each registered tail back to the rows still holding the
+claimed prompt bytes (evicting keys left claiming nothing), so no later
+request can match a stale key and alias diverged content.
 
 Dedup accounting: ``logical_blocks`` counts block-spans *served* (every
 acquire, shared or not), ``physical_blocks`` counts blocks *stored*
@@ -86,6 +93,11 @@ class BlockPool:
 
     def alloc(self) -> int:
         """Take a fresh block off the free list (refcount 1)."""
+        if not self.free:
+            raise RuntimeError(
+                f"block pool exhausted: all {self.n_blocks - 1} usable "
+                f"blocks are referenced"
+            )
         blk = self.free.popleft()
         self.refcount[blk] = 1
         self.logical_blocks += 1
@@ -156,12 +168,73 @@ class BlockPool:
         counted when acquired."""
         if self.refcount[blk] < 2:
             raise RuntimeError(f"cow on unshared block {blk}")
+        if not self.free:
+            raise RuntimeError(
+                f"block pool exhausted: no free block to copy-on-write "
+                f"block {blk}"
+            )
         new = self.free.popleft()
         self.refcount[new] = 1
         self.physical_blocks += 1
         self.cow_copies += 1
         self.decref(blk)
         return new
+
+    def note_generated_write(self, blk: int, row: int) -> None:
+        """A generated-token row just landed in ``blk`` IN PLACE at
+        ``row`` (no COW — the writer owns the block alone).
+
+        Rows at and past ``row`` no longer encode any registered prompt
+        chain, so every lookup key claiming them is trimmed back to the
+        rows still holding the claimed bytes (``tail[:row]``), or
+        evicted when nothing valid remains.  Without this, a
+        shorter-tailed sharer that outlives the registrant of a partial
+        span diverges the block under the registrant's stale key, and a
+        later request matching that key would alias — and write-through
+        corrupt — the live owner's generated rows.  Idempotent and cheap
+        (generated rows only ever extend forward), so the engine calls
+        it on every in-place generated write.
+        """
+        descs = self._keys.get(blk)
+        if not descs:
+            return  # unregistered (generated-only span or COW copy)
+        kept: List[_KeyDesc] = []
+        for desc in descs:
+            if desc[0] == "full":
+                # a full key claims the whole span; by construction full
+                # spans lie inside every sharer's prompt and never take
+                # generated rows, but evicting is the safe default
+                if self._full.get(desc[1]) == blk:
+                    del self._full[desc[1]]
+                continue
+            _, chain, tail = desc
+            if len(tail) <= row:  # key claims only rows below the write
+                kept.append(desc)
+                continue
+            entries = self._partial.setdefault(chain, [])
+            entries[:] = [e for e in entries
+                          if not (e[1] == blk and e[0] == tail)]
+            if row > 0:  # rows [0, row) still encode chain + tail[:row]
+                entries.append((tail[:row], blk))
+                kept.append(("partial", chain, tail[:row]))
+            if not entries:
+                del self._partial[chain]
+        if kept:
+            self._keys[blk] = kept
+        else:
+            self._keys.pop(blk, None)
+
+    def registered_claims(self) -> List[Tuple[TokenChain, int]]:
+        """Every ``(token chain, block)`` the prefix registry currently
+        claims — a block appears with chain ``c`` iff a request whose
+        prompt starts with ``c`` may be handed that block by
+        :meth:`acquire`.  White-box oracle for the content-vs-key
+        consistency property tests."""
+        out: List[Tuple[TokenChain, int]] = list(self._full.items())
+        for chain, entries in self._partial.items():
+            for tail, blk in entries:
+                out.append((chain + tail, blk))
+        return out
 
     def _share(self, blk: int) -> int:
         self.incref(blk)
@@ -215,6 +288,30 @@ class BlockPool:
             for _, blk in entries:
                 assert self.refcount[blk] >= 1, (
                     f"registry holds dead block {blk}"
+                )
+        # the registry and its reverse map agree in both directions (a
+        # one-sided trim/evict would leave a stale key matchable)
+        for blk, descs in self._keys.items():
+            for desc in descs:
+                if desc[0] == "full":
+                    assert self._full.get(desc[1]) == blk, (
+                        f"reverse map holds full key for {blk} the "
+                        f"registry dropped"
+                    )
+                else:
+                    assert (desc[2], blk) in self._partial.get(desc[1], []), (
+                        f"reverse map holds partial key for {blk} the "
+                        f"registry dropped"
+                    )
+        for chain, blk in self._full.items():
+            assert ("full", chain) in self._keys.get(blk, []), (
+                f"full key for {blk} missing from its reverse map"
+            )
+        for chain, entries in self._partial.items():
+            assert entries, f"empty partial entry list for chain {chain}"
+            for tail, blk in entries:
+                assert ("partial", chain, tail) in self._keys.get(blk, []), (
+                    f"partial key for {blk} missing from its reverse map"
                 )
         assert self.physical_blocks <= self.logical_blocks, (
             "stored more block-spans than were served"

@@ -137,8 +137,12 @@ def _jit_reset_slots():
 @functools.lru_cache(maxsize=1)
 def _jit_copy_block():
     """COW device copy (src/dst are traced scalars: one trace per cache
-    structure serves every copy)."""
-    return jax.jit(transformer.copy_paged_block)
+    structure serves every copy).  The cache operand is DONATED: the
+    copy updates the pool buffers in place instead of rebuilding every
+    leaf, so a single-block COW costs O(block), not O(pool), and never
+    transiently doubles pool memory.  Safe because both drain loops
+    rebind ``cache`` to the result and never touch the old reference."""
+    return jax.jit(transformer.copy_paged_block, donate_argnums=0)
 
 
 class RequestTooLong(ValueError):
@@ -559,18 +563,25 @@ class ServeEngine:
                         # block's content, so a block other slots still
                         # reference gets a private copy first (prompt rows
                         # write through — sharers write identical bytes)
-                        if (positions[b] >= len(r.prompt)
-                                and pool.refcount_of(
-                                    int(block_tables[b, j])) > 1):
-                            old = int(block_tables[b, j])
-                            new = pool.cow(old)
-                            cache = self._copy_block(
-                                cache, jnp.int32(old), jnp.int32(new)
+                        if positions[b] >= len(r.prompt):
+                            if pool.refcount_of(
+                                    int(block_tables[b, j])) > 1:
+                                old = int(block_tables[b, j])
+                                new = pool.cow(old)
+                                cache = self._copy_block(
+                                    cache, jnp.int32(old), jnp.int32(new)
+                                )
+                                block_tables[b, j] = new
+                                self.block_history.setdefault(
+                                    r.uid, []
+                                ).append(new)
+                            # in-place generated write: any registry key
+                            # claiming this row or beyond is now stale —
+                            # trim it before a later prompt can match it
+                            pool.note_generated_write(
+                                int(block_tables[b, j]),
+                                int(positions[b]) % bs,
                             )
-                            block_tables[b, j] = new
-                            self.block_history.setdefault(
-                                r.uid, []
-                            ).append(new)
                 if self._has_state and reset_mask.any():
                     cache = self._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False
@@ -744,6 +755,13 @@ class ServeEngine:
                                 self.block_history.setdefault(
                                     r.uid, []
                                 ).append(new)
+                            # in-place generated rows land from
+                            # max(gen_from, j*bs) onward in this block:
+                            # trim any registry key claiming them
+                            pool.note_generated_write(
+                                int(block_tables[b, j]),
+                                max(gen_from, j * bs) % bs,
+                            )
                 if self._has_state and reset_mask.any():
                     cache = self._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False

@@ -11,6 +11,10 @@ after EVERY operation:
   in a refcount-1 block (COW first when shared);
 * sharing is content-true — a shared acquire returns a block whose
   registered token chain is byte-identical to the joiner's prompt span;
+* the registry never lies — every registered claim matches the shadow
+  content byte-for-byte after EVERY op, including in-place generated
+  writes (modeled with a sentinel the engine's
+  ``note_generated_write`` trim hook must keep out of every claim);
 * no double free, no incref on dead blocks, null block never allocated;
 * dedup accounting — ``physical <= logical``, ratio >= 1, and counters
   reconcile with the shadow model.
@@ -66,6 +70,19 @@ def _drive(ops, *, n_blocks=24, bs=4, share=True):
     def spans(n):
         return math.ceil(n / bs)
 
+    def check():
+        pool.check_invariants()
+        # content-vs-key consistency: every registered claim must match
+        # the shadow bytes exactly — THE oracle for the stale-partial-key
+        # bug, where an in-place generated write (modeled as a "GEN"
+        # sentinel below) diverges a block its registry key still claims
+        for claim, blk in pool.registered_claims():
+            got = content.get(blk, ())
+            assert got[: len(claim)] == claim, (
+                f"stale registry claim on block {blk}: "
+                f"claims {claim}, rows hold {got}"
+            )
+
     def finish(uid):
         st_ = live.pop(uid)
         for blk in st_["blocks"]:
@@ -85,7 +102,7 @@ def _drive(ops, *, n_blocks=24, bs=4, share=True):
             if len(pool.free) < spans(len(prompt)):
                 if live:  # full pool: evict instead (what preempt does)
                     finish(sorted(live)[v % len(live)])
-                pool.check_invariants()
+                check()
                 continue
             blocks = []
             for j in range(spans(len(prompt))):
@@ -110,13 +127,13 @@ def _drive(ops, *, n_blocks=24, bs=4, share=True):
             st_ = live[uid]
             if st_["pos"] >= max_pos:
                 finish(uid)
-                pool.check_invariants()
+                check()
                 continue
             j = st_["pos"] // bs
             if j >= len(st_["blocks"]):  # crossed into a fresh span
                 if not pool.free:
                     finish(uid)
-                    pool.check_invariants()
+                    check()
                     continue
                 blk = pool.acquire(st_["prompt"], j)
                 # generated-only spans are NEVER shared or registered
@@ -126,7 +143,7 @@ def _drive(ops, *, n_blocks=24, bs=4, share=True):
             if pool.refcount_of(blk) > 1:  # divergence: COW before writing
                 if not pool.free:
                     finish(uid)
-                    pool.check_invariants()
+                    check()
                     continue
                 new = pool.cow(blk)
                 assert new != blk and new != NULL_BLOCK
@@ -140,17 +157,24 @@ def _drive(ops, *, n_blocks=24, bs=4, share=True):
                 f"generated write into shared block {blk} "
                 f"(refcount {pool.refcount_of(blk)})"
             )
+            # the in-place generated write itself: mirror the engine's
+            # stale-key trim hook, and poison the shadow content from
+            # this row on — check() then proves no registry key ever
+            # claims a generated byte as prompt content
+            pool.note_generated_write(blk, st_["pos"] % bs)
+            if blk in content:
+                content[blk] = content[blk][: st_["pos"]] + ("GEN",)
             st_["pos"] += 1
         elif kind == "finish" and live:
             finish(sorted(live)[v % len(live)])
-        pool.check_invariants()
+        check()
         assert pool.physical_blocks <= pool.logical_blocks
         assert pool.dedup_ratio >= 1.0
 
     # drain: every request releases its blocks; the pool must come back whole
     for uid in sorted(live):
         finish(uid)
-    pool.check_invariants()
+    check()
     assert all(c == 0 for c in pool.refcount)
     assert len(pool.free) == n_blocks - 1
     return pool
@@ -256,6 +280,64 @@ def test_partial_tail_prefix_shares_but_longer_tail_does_not():
     assert pool.acquire((1, 2, 3, 4, 5), 1) == reg       # tail (5,) subset
     assert pool.acquire((1, 2, 3, 4, 5, 6, 7), 1) != reg  # longer: rejected
     pool.check_invariants()
+
+
+def test_stale_partial_key_trimmed_on_inplace_generated_write():
+    """THE partial-tail soundness regression: registrant tail (5, 6),
+    joiner tail (5,) — the registrant frees, the joiner (now sole owner,
+    so no COW) writes its first generated token in place at row 1.  The
+    registered (.., (5, 6)) key now claims a generated byte as prompt
+    content; before the trim hook, a later (5, 6) prompt aliased the
+    diverged block and its write-through corrupted the owner's stream."""
+    pool = BlockPool(8, 4, share_prefixes=True)
+    reg = pool.acquire((1, 2, 3, 4, 5, 6), 1)   # registers tail (5, 6)
+    join = pool.acquire((1, 2, 3, 4, 5), 1)     # tail (5,): strict prefix
+    assert join == reg and pool.refcount_of(reg) == 2
+    pool.decref(reg)                            # registrant finishes
+    assert pool.refcount_of(reg) == 1           # joiner owns it alone
+    # the joiner's first generated token: position 5 -> row 1, no COW
+    pool.note_generated_write(reg, 1)
+    pool.check_invariants()
+    # the stale (5, 6) claim is gone: a byte-identical later prompt must
+    # allocate fresh instead of aliasing the diverged row
+    assert pool.acquire((1, 2, 3, 4, 5, 6), 1) != reg
+    # ...but row 0 still holds the claimed prompt byte, so the trimmed
+    # (5,) key keeps sharing sound prefixes
+    assert pool.acquire((1, 2, 3, 4, 5), 1) == reg
+    pool.check_invariants()
+
+
+def test_inplace_write_past_registered_tail_keeps_the_key():
+    """An owner whose prompt tail EQUALS the registered tail generates
+    strictly past the claimed rows, so the key survives untrimmed and a
+    later identical prompt still shares the block."""
+    pool = BlockPool(8, 4, share_prefixes=True)
+    reg = pool.acquire((1, 2, 3, 4, 5, 6), 1)  # tail (5, 6): rows 0-1
+    pool.note_generated_write(reg, 2)          # first generated row: 2
+    assert pool.acquire((1, 2, 3, 4, 5, 6), 1) == reg
+    pool.check_invariants()
+
+
+def test_pool_exhaustion_raises_descriptive():
+    """An empty free list surfaces as a typed, descriptive error from
+    both alloc() and cow() — never a bare IndexError — and a failed
+    cow() leaves the pool state untouched."""
+    pool = BlockPool(3, 4)  # 2 usable blocks
+    pool.alloc()
+    pool.alloc()
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc()
+    pool.check_invariants()
+
+    pool2 = BlockPool(3, 4, share_prefixes=True)
+    prompt = (1, 2, 3, 4)
+    a = pool2.acquire(prompt, 0)
+    assert pool2.acquire(prompt, 0) == a  # shared: refcount 2
+    pool2.alloc()  # drain the free list
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool2.cow(a)
+    assert pool2.refcount_of(a) == 2  # the failed cow changed nothing
+    pool2.check_invariants()
 
 
 def test_cow_detaches_and_decrefs_the_shared_block():

@@ -174,6 +174,69 @@ def test_preempt_shared_slot_leaves_survivor_bit_identical():
     assert faulted.stats()["block_dedup_ratio"] > 1.0
 
 
+def test_stale_partial_tail_after_preempt_serves_clean_streams():
+    """THE partial-tail soundness regression, end-to-end: request 0
+    registers a 3-token ragged tail, request 1 joins with a 1-token
+    strict prefix of it, and request 0 is preempted on the exact step
+    request 1 writes its first generated token — so that write lands IN
+    PLACE (sole owner, no COW) in rows request 0's registry key still
+    claims.  Request 0's replay then presents the very prompt that key
+    matches: before the engine trimmed stale keys, the replay aliased
+    the diverged block and its prompt write-through overwrote request
+    1's live generated rows.  Both streams must stay byte-identical to
+    the sharing-disabled fault-free baseline, with zero COWs (nothing in
+    this trace legitimately diverges a still-shared block)."""
+    cfg, params = _model("gpt2-124m")
+    rng = np.random.default_rng(37)
+    chain = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    tail = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    prompts = [np.concatenate([chain, tail]),      # registers rows 0-2
+               np.concatenate([chain, tail[:1]])]  # strict-prefix tail
+    max_new = {0: 4, 1: 16}
+
+    def run(share, hook=None):
+        eng = ServeEngine(cfg, params, max_batch=2, max_len=32,
+                          scheduler="continuous", block_size=8,
+                          share_prefixes=share)
+        if hook is not None:
+            eng.add_step_hook(hook)
+        for uid, p in enumerate(prompts):
+            eng.submit(Request(uid=uid, prompt=p.copy(),
+                               max_new_tokens=max_new[uid]))
+        eng.run_until_drained()
+        return eng
+
+    fired = []
+
+    def hook(engine, busy):
+        live = engine._live
+        if live is None or fired:
+            return False
+        for b, r in enumerate(live["slot_req"]):
+            # request 1 at position 9 == its first generated write into
+            # row 1 of the shared ragged block, this very step: the
+            # preemption decrefs request 0 away first, so the write goes
+            # in place under the stale 3-row key
+            if r is not None and r.uid == 1 and live["positions"][b] == 9:
+                fired.append(engine.preempt(uid=0))
+        return False
+
+    base = run(share=False)
+    faulted = run(share=True, hook=hook)
+    assert fired == [0] and faulted.preemptions == 1
+    for uid in (0, 1):
+        assert faulted.completed[uid].generated == \
+            base.completed[uid].generated, uid
+    s = faulted.stats()
+    # the full first span re-shares on replay; the diverged ragged claim
+    # was trimmed, so the replay allocates fresh instead of COWing a
+    # block it was never entitled to share
+    assert s["shared_block_hits"] > 0
+    assert s["cow_copies"] == 0, (
+        "replay aliased a diverged block via a stale partial key"
+    )
+
+
 # ---------------------------------------------------------------------------
 # quantized KV: teacher-forced accuracy against the f32 cache
 # ---------------------------------------------------------------------------

@@ -115,6 +115,26 @@ def slot_utilization(
     return min(1.0, busy_slot_steps / (steps * slots))
 
 
+def acceptance_rate(accepted: float, drafted: float) -> float:
+    """Accepted draft tokens per token drafted — Eq. 1's active-lane
+    fraction, lifted to speculative decoding.
+
+    A k-wide verification step is a vector issue whose "lanes" are the k
+    drafted positions: every lane's work is executed (the fused target
+    step scores all k tokens regardless), but only the accepted prefix
+    retires useful results — the rejected suffix is masked off by the
+    position rewind, exactly as a predicated-out SVE lane burns an issue
+    slot without contributing elements.  1.0 means every draft survived
+    verification (all lanes active); low values mean the draft model
+    disagrees with the target and speculation is mostly rewound work.
+    Degenerate inputs (nothing drafted — e.g. speculation disabled)
+    report 0.0.
+    """
+    if drafted <= 0:
+        return 0.0
+    return min(1.0, accepted / drafted)
+
+
 def block_dedup_ratio(bytes_served: float, bytes_stored: float) -> float:
     """KV-cache bytes served per byte physically stored — Eq. 1's lane
     utilization as a *memory* metric.

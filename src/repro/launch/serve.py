@@ -15,7 +15,12 @@ stores the paged KV pool quantized (per-row fp32 scales for int8) and
 ``--share-prefixes`` deduplicates identical prompt prefixes onto shared
 pool blocks with copy-on-write (``--shared-prefix-len N`` samples traffic
 that exercises it); both fork the ledger key (``+kv<dtype>`` /
-``+shared``).  ``--record`` appends the serving metrics (tok/s,
+``+shared``).  ``--draft <arch> --spec-k N`` turns on speculative
+decoding (the draft model proposes up to N tokens per slot, one fused
+target step verifies them; ledger key gains ``+spec<N>``), and
+``--temperature/--top-k/--sample-seed`` select real sampling with
+per-request PRNG streams (temperature 0 = greedy, bit-identical to the
+pre-sampling engine).  ``--record`` appends the serving metrics (tok/s,
 p50/p95 request latency, slot utilization, block dedup ratio) to the perf
 trajectory ledger, where ``python -m repro.perf report`` renders them;
 ``--out`` writes the full machine-readable serve report.
@@ -48,6 +53,11 @@ def build_report(args: argparse.Namespace, engine: ServeEngine,
         "prefill_budget": engine.prefill_budget,
         "kv_dtype": engine.kv_dtype,
         "share_prefixes": engine.share_prefixes,
+        "draft": getattr(args, "draft", None),
+        "spec_k": engine.spec_k,
+        "temperature": engine.temperature,
+        "top_k": engine.top_k,
+        "sample_seed": engine.sample_seed,
         "rejected": len(rejections),
         "rejections": [{"uid": u, "reason": reason} for u, reason in rejections],
         "stats": engine.stats(),
@@ -100,6 +110,19 @@ def main(argv=None) -> int:
                     help="sample all prompts with a common prefix of this "
                          "length (exercises --share-prefixes; 0 = fully "
                          "random prompts)")
+    ap.add_argument("--draft", default=None,
+                    help="draft-model arch for speculative decoding "
+                         "(e.g. gpt2-124m); requires --spec-k >= 1")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="draft tokens proposed per slot per fused target "
+                         "step (0 = speculation off)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k highest-probability "
+                         "tokens (0 = full vocab; needs --temperature > 0)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base seed of the per-request sampling streams")
     ap.add_argument("--warmup", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="compile the fused step before serving so TTFT "
@@ -114,13 +137,28 @@ def main(argv=None) -> int:
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     params = steps_mod.init_model(jax.random.PRNGKey(args.seed), cfg)
+    draft_cfg = draft_params = None
+    if args.spec_k > 0:
+        if not args.draft:
+            ap.error("--spec-k requires --draft <arch>")
+        draft_cfg = (configs.get_smoke_config(args.draft) if args.smoke
+                     else configs.get_config(args.draft))
+        # same init seed as the target: --draft <same arch> gives exact
+        # self-speculation (acceptance 1.0 at temperature 0), the
+        # acceptance-friendly setup CI uses for the fewer-steps assert
+        draft_params = steps_mod.init_model(
+            jax.random.PRNGKey(args.seed), draft_cfg
+        )
     engine = ServeEngine(cfg, params, max_batch=args.max_batch,
                          max_len=args.max_len, scheduler=args.scheduler,
                          block_size=args.block_size,
                          prefill_chunk=args.prefill_chunk,
                          prefill_budget=args.prefill_budget,
                          kv_dtype=args.kv_dtype,
-                         share_prefixes=args.share_prefixes)
+                         share_prefixes=args.share_prefixes,
+                         temperature=args.temperature, top_k=args.top_k,
+                         sample_seed=args.sample_seed, spec_k=args.spec_k,
+                         draft_cfg=draft_cfg, draft_params=draft_params)
     if args.warmup:
         engine.warmup()
 
@@ -168,6 +206,12 @@ def main(argv=None) -> int:
               f"({stats['shared_block_hits']} shared hits, "
               f"{stats['cow_copies']} COW copies, "
               f"dedup {stats['block_dedup_ratio']:.3f})")
+    if engine.spec_k > 0:
+        print(f"  speculative: draft {args.draft} k={engine.spec_k}, "
+              f"acceptance {stats['acceptance_rate']:.3f} "
+              f"({stats['accepted_tokens']}/{stats['drafted_tokens']} "
+              f"drafts accepted, {stats['draft_steps']} draft steps, "
+              f"{stats['target_steps']} target steps)")
     if rejections:
         print(f"  rejected {len(rejections)} oversized request(s) at submit:")
         for uid, reason in rejections:

@@ -544,6 +544,48 @@ def reset_paged_slots(cache: Dict[str, Any], mask: jax.Array) -> Dict[str, Any]:
     return new
 
 
+#: per-slot recurrent-state leaves of a paged cache (everything that is
+#: NOT paged: attention rows rewind by masking, these rewind by restore)
+_STATE_KEYS = ("ssm_state", "conv_state")
+
+
+def slot_state(cache: Dict[str, Any]) -> Dict[str, Any]:
+    """Reference snapshot of every per-slot recurrent-state leaf.
+
+    jax arrays are immutable, so holding the leaves IS the snapshot —
+    no copy, no device work.  Speculative verification snapshots before
+    committing k+1 tokens: attention rows past a rejection point are
+    hidden by the position mask, but SSM/conv state is *accumulated* by
+    every scanned token, so a rejected suffix must be undone with
+    :func:`restore_slot_state` + a replay of the accepted prefix.
+    Empty per-slot dicts for attention-only architectures.
+    """
+    return {
+        s: {k: leaf for k, leaf in c.items() if k in _STATE_KEYS}
+        for s, c in cache["blocks"].items()
+    }
+
+
+def restore_slot_state(
+    cache: Dict[str, Any], state: Dict[str, Any], mask: jax.Array
+) -> Dict[str, Any]:
+    """Restore recurrent state from a :func:`slot_state` snapshot for every
+    slot where ``mask`` (B,) is True; other slots keep their current state
+    bitwise (``where`` with a False lane is identity)."""
+    def _blend(slot_cache, snap):
+        out = dict(slot_cache)
+        for k, leaf in snap.items():
+            m = mask.reshape((1, mask.shape[0]) + (1,) * (leaf.ndim - 2))
+            out[k] = jnp.where(m, leaf, slot_cache[k])
+        return out
+
+    new = dict(cache)
+    new["blocks"] = {
+        s: _blend(c, state.get(s, {})) for s, c in cache["blocks"].items()
+    }
+    return new
+
+
 def copy_paged_block(
     cache: Dict[str, Any], src: jax.Array, dst: jax.Array
 ) -> Dict[str, Any]:

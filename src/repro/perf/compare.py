@@ -92,6 +92,18 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("cow_copies", "higher", 0.0),
         MetricSpec("kv_bytes_served", "lower", 0.0),
         MetricSpec("kv_bytes_stored", "higher", 0.0),
+        # speculative decoding: all exact given the trace, so tol 0.
+        # acceptance_rate falling is the Eq. 1 regression (fewer active
+        # lanes per k-wide verification issue); more rejected tokens,
+        # more draft calls, or more target fused calls for the same
+        # traffic all mean speculation got less effective.
+        MetricSpec("acceptance_rate", "lower", 0.0),
+        MetricSpec("drafted_tokens", "lower", 0.0),
+        MetricSpec("accepted_tokens", "lower", 0.0),
+        MetricSpec("rejected_tokens", "higher", 0.0),
+        MetricSpec("draft_steps", "higher", 0.0),
+        MetricSpec("target_steps", "higher", 0.0),
+        MetricSpec("spec_k", "lower", 0.0),
     )
 }
 

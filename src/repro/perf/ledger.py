@@ -297,6 +297,11 @@ _SERVING_METRICS = (
     "logical_blocks", "physical_blocks", "shared_block_hits",
     "cow_copies", "kv_bytes_served", "kv_bytes_stored",
     "block_dedup_ratio",
+    # speculative decoding: exact counters (deterministic given the
+    # trace, held at tol 0) plus acceptance_rate — the Eq. 1 active-lane
+    # fraction of each k-wide verification issue
+    "spec_k", "drafted_tokens", "accepted_tokens", "rejected_tokens",
+    "draft_steps", "target_steps", "acceptance_rate",
 )
 
 #: _SERVING_METRICS names that are exact counters (held tight by the gate);
@@ -306,6 +311,8 @@ _SERVING_INT_METRICS = frozenset((
     "slot_steps", "preemptions", "rejected", "restarts", "prefill_chunk",
     "logical_blocks", "physical_blocks", "shared_block_hits",
     "cow_copies", "kv_bytes_served", "kv_bytes_stored",
+    "spec_k", "drafted_tokens", "accepted_tokens", "rejected_tokens",
+    "draft_steps", "target_steps",
 ))
 
 
@@ -327,8 +334,11 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
     are different experiments (fewer fused steps, different TTFT), so the
     gate must never compare one against the other's baseline.  The same
     reasoning forks ``+kv<dtype>`` for quantized KV pools (different
-    bytes/block, different accuracy budget) and ``+shared`` for
-    prefix-sharing runs (different physical-block trajectory)."""
+    bytes/block, different accuracy budget), ``+shared`` for
+    prefix-sharing runs (different physical-block trajectory), and
+    ``+spec<k>`` for speculative-decoding runs (fewer fused target steps
+    by design — comparing them against the non-speculative baseline
+    would read the win as a regression of the step counters)."""
     stats = report.get("stats") or {}
     chunk = int(report.get("prefill_chunk",
                            stats.get("prefill_chunk", 1)) or 1)
@@ -342,6 +352,9 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
         key += f"+kv{kv_dtype}"
     if report.get("share_prefixes", stats.get("share_prefixes")):
         key += "+shared"
+    spec_k = int(report.get("spec_k", stats.get("spec_k", 0)) or 0)
+    if spec_k > 0:
+        key += f"+spec{spec_k}"
     row = _serving_row(stats)
     # submit-time rejections live on the report, not in engine stats: the
     # engine never saw those requests (launch.serve counts them)

@@ -190,11 +190,19 @@ class Scenario:
     #: "shared-off" = the SAME shared-prefix traffic, sharing disabled
     #: (the golden baseline a "shared" cell is diffed against)
     prompt_sharing: str = "none"
+    #: speculative-decoding axis: 0 = off, k > 0 = the engine drafts and
+    #: verifies k tokens per fused target step (continuous only).  The
+    #: axis never changes the sampled traffic — a speculating cell's
+    #: golden baseline is the SAME cell with speculation off
+    #: (:meth:`spec_twin`), which must serve byte-identical streams.
+    spec_k: int = 0
 
     def __post_init__(self):
         if self.prompt_sharing not in ("none", "shared", "shared-off"):
             raise ValueError(
                 f"unknown prompt_sharing {self.prompt_sharing!r}")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
 
     @property
     def share_prefixes(self) -> bool:
@@ -205,9 +213,9 @@ class Scenario:
     @property
     def traffic_key(self) -> str:
         """Axes the sampled traffic depends on.  Scheduler, fault, the
-        prefill-chunking axis, and the sharing MODE are EXCLUDED so twins,
-        cross-scheduler cells, and chunked-vs-token-by-token cells all
-        share a trace.  The traffic *shape* (shared prefixes vs plain) is
+        prefill-chunking axis, the speculation axis, and the sharing MODE
+        are EXCLUDED so twins, cross-scheduler cells, and
+        chunked-vs-token-by-token cells all share a trace.  The traffic *shape* (shared prefixes vs plain) is
         included — it changes the sampled prompts — but "shared" and
         "shared-off" collapse onto the same key, so the COW engine and its
         sharing-disabled baseline serve byte-identical requests."""
@@ -229,6 +237,8 @@ class Scenario:
             parts.append(f"pc{self.prefill_chunk}")
         if self.prompt_sharing != "none":
             parts.append(self.prompt_sharing)
+        if self.spec_k > 0:
+            parts.append(f"spec{self.spec_k}")
         return "/".join(parts)
 
     @property
@@ -257,6 +267,14 @@ class Scenario:
         physical blocks."""
         return dataclasses.replace(self, fault="none",
                                    prompt_sharing="shared-off")
+
+    def spec_twin(self) -> "Scenario":
+        """The speculation-off golden twin of a speculative cell: same
+        traffic (the speculation axis is outside the traffic key),
+        fault-free, ``spec_k=0``.  The speculative engine must serve
+        byte-identical streams — speculation may only change how many
+        fused target steps they cost."""
+        return dataclasses.replace(self, fault="none", spec_k=0)
 
 
 def cell_seed(spec_seed: int, traffic_key: str) -> int:
@@ -297,6 +315,11 @@ class MatrixSpec:
     #: sharing-disabled twin by the runner
     prompt_sharing: List[str] = dataclasses.field(
         default_factory=lambda: ["none"])
+    #: speculative-decoding axis (0 = off, k > 0 = draft/verify width):
+    #: speculating cells run continuous-only and are golden-diffed
+    #: against their speculation-off twin by the runner
+    speculate: List[int] = dataclasses.field(
+        default_factory=lambda: [0])
     requests: int = 6
     max_new: int = 8
     max_batch: int = 2
@@ -318,12 +341,17 @@ class MatrixSpec:
         combos = itertools.product(
             self.archs, self.schedulers, self.arrivals, self.prompts,
             self.eos, self.faults, self.prefill_chunks, self.prompt_sharing,
+            self.speculate,
         )
-        for arch, sched, arr, pr, eo, fault, pc, ps in combos:
+        for arch, sched, arr, pr, eo, fault, pc, ps, sk in combos:
             if pc > 1 and sched != "continuous":
                 continue  # wave has no chunked path
             if ps != "none" and sched != "continuous":
                 continue  # wave has no block pool to deduplicate
+            if sk > 0 and sched != "continuous":
+                continue  # speculation verifies over the paged cache
+            if sk > 0 and pc > 1:
+                continue  # speculation owns the multi-token window
             cell = Scenario(
                 arrival=arr, prompt=pr, eos=eo,
                 scheduler=sched, arch=arch, fault=fault,
@@ -336,6 +364,7 @@ class MatrixSpec:
                 prefill_chunk=pc,
                 prefill_budget=self.prefill_budget if pc > 1 else None,
                 prompt_sharing=ps,
+                spec_k=sk,
             )
             if not get_plan(fault).applies_to(cell):
                 continue
@@ -413,6 +442,7 @@ def full_matrix() -> MatrixSpec:
         archs=list(SERVE_ARCHS),
         faults=["none", "preempt", "device-loss", "malformed"],
         prompt_sharing=["none", "shared"],
+        speculate=[0, 4],
         requests=8,
         max_new=8,
         max_batch=2,

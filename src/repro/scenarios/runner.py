@@ -50,6 +50,11 @@ from repro.train import steps as steps_mod
 _PARAMS_LOCK = threading.Lock()
 _PARAMS: Dict[str, Tuple[Any, Any]] = {}
 
+#: draft model every speculating cell uses (the ISSUE's small-draft
+#: setup); cells targeting this same arch self-speculate at acceptance
+#: 1.0, other archs exercise the rejection/rewind path
+DRAFT_ARCH = "gpt2-124m"
+
 
 def _params_for(arch: str) -> Tuple[Any, Any]:
     with _PARAMS_LOCK:
@@ -58,6 +63,15 @@ def _params_for(arch: str) -> Tuple[Any, Any]:
             _PARAMS[arch] = (cfg, steps_mod.init_model(
                 jax.random.PRNGKey(0), cfg))
         return _PARAMS[arch]
+
+
+def _spec_kwargs(cell: Scenario) -> Dict[str, Any]:
+    """ServeEngine speculation kwargs for a cell (empty when off)."""
+    if cell.spec_k <= 0:
+        return {}
+    draft_cfg, draft_params = _params_for(DRAFT_ARCH)
+    return {"spec_k": cell.spec_k, "draft_cfg": draft_cfg,
+            "draft_params": draft_params}
 
 
 class TrafficFeeder:
@@ -127,6 +141,7 @@ def _execute_engine(cell: Scenario, cfg, params,
         prefill_chunk=cell.prefill_chunk,
         prefill_budget=cell.prefill_budget,
         share_prefixes=cell.share_prefixes,
+        **_spec_kwargs(cell),
     )
     feeder = TrafficFeeder(trace)
     engine.add_step_hook(feeder)
@@ -187,6 +202,7 @@ def _execute_resilient(cell: Scenario, cfg, params,
             prefill_chunk=cell.prefill_chunk,
             prefill_budget=cell.prefill_budget,
             share_prefixes=cell.share_prefixes,
+            **_spec_kwargs(cell),
         )
         feeder = TrafficFeeder(rebased)
         engine.add_step_hook(feeder)
@@ -236,7 +252,9 @@ def _execute_resilient(cell: Scenario, cfg, params,
         "requests", "new_tokens", "fused_steps", "busy_slot_steps",
         "slot_steps", "preemptions", "wall_s",
         "logical_blocks", "physical_blocks", "shared_block_hits",
-        "cow_copies", "kv_bytes_served", "kv_bytes_stored")}
+        "cow_copies", "kv_bytes_served", "kv_bytes_stored",
+        "drafted_tokens", "accepted_tokens", "rejected_tokens",
+        "draft_steps", "target_steps")}
     lats = [v for o in obs for v in o["lats"]]
     ttfts = [v for o in obs for v in o["ttfts"]]
     ttft_steps = [float(v) for o in obs for v in o["ttft_steps"]]
@@ -247,12 +265,17 @@ def _execute_resilient(cell: Scenario, cfg, params,
         "scheduler": cell.scheduler,
         "prefill_chunk": cell.prefill_chunk,
         "share_prefixes": cell.share_prefixes,
+        "spec_k": cell.spec_k,
         **{k: totals[k] for k in ("requests", "new_tokens", "fused_steps",
                                   "busy_slot_steps", "slot_steps",
                                   "preemptions", "logical_blocks",
                                   "physical_blocks", "shared_block_hits",
                                   "cow_copies", "kv_bytes_served",
-                                  "kv_bytes_stored")},
+                                  "kv_bytes_stored", "drafted_tokens",
+                                  "accepted_tokens", "rejected_tokens",
+                                  "draft_steps", "target_steps")},
+        "acceptance_rate": core_metrics.acceptance_rate(
+            totals["accepted_tokens"], totals["drafted_tokens"]),
         # block-granular fallback for pure-SSM archs (zero paged KV bytes)
         "block_dedup_ratio": core_metrics.block_dedup_ratio(
             totals["kv_bytes_served"], totals["kv_bytes_stored"]
@@ -327,6 +350,7 @@ class CellResult:
             "prefill_chunk": self.cell.prefill_chunk,
             "prefill_budget": self.cell.prefill_budget,
             "prompt_sharing": self.cell.prompt_sharing,
+            "spec_k": self.cell.spec_k,
             "seed": self.cell.seed,
             "ok": self.ok,
             "stats": self.stats,
@@ -418,6 +442,27 @@ def run_cell(cell: Scenario, *, check_twin: bool = True) -> CellResult:
                 "[vs sharing-off] block_dedup_ratio "
                 f"{result.stats.get('block_dedup_ratio')} <= 1 on "
                 "shared-prefix traffic")
+    if cell.spec_k > 0 and check_twin:
+        # the speculation axis gets golden treatment too: the speculative
+        # engine must serve the speculation-off twin's exact streams while
+        # actually drafting (drafted > 0 and acceptance recorded); step
+        # counts are NOT asserted here — acceptance-hostile cells (draft
+        # disagreeing with the target) legitimately spend extra replay
+        # steps, and the per-key perf ledger holds each trajectory instead
+        try:
+            vtwin = _execute(cell.spec_twin(), inject=False)
+        except Exception as e:  # noqa: BLE001
+            result.error = f"spec twin failed: {type(e).__name__}: {e}"
+            return result
+        result.golden_checked = True
+        result.golden_diffs += [
+            f"[vs spec-off] {d}"
+            for d in _diff_tokens(result.tokens, vtwin.tokens)
+        ]
+        if (result.stats.get("requests", 0)
+                and not result.stats.get("drafted_tokens", 0)):
+            result.golden_diffs.append(
+                "[vs spec-off] speculative cell drafted zero tokens")
     result.slo_failures = cell.slo.check(result.stats)
     return result
 

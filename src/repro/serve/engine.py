@@ -65,6 +65,7 @@ from repro.configs.base import LayerKind, ModelConfig
 from repro.core import metrics as core_metrics
 from repro.models import transformer
 from repro.serve.block_pool import BlockPool
+from repro.serve.sampling import SlotSampler
 
 SCHEDULERS = ("continuous", "wave")
 
@@ -204,7 +205,11 @@ class ServeEngine:
                  max_len: int = 256, scheduler: str = "continuous",
                  block_size: int = 16, prefill_chunk: int = 1,
                  prefill_budget: Optional[int] = None,
-                 kv_dtype: str = "f32", share_prefixes: bool = False):
+                 kv_dtype: str = "f32", share_prefixes: bool = False,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0, spec_k: int = 0,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params=None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
                              f"got {scheduler!r}")
@@ -238,6 +243,29 @@ class ServeEngine:
                 "prefix sharing requires the continuous scheduler's "
                 "paged block pool"
             )
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0 (0 = off), got {spec_k}")
+        if spec_k > 0:
+            if draft_cfg is None or draft_params is None:
+                raise ValueError(
+                    "speculative decoding (spec_k > 0) requires a draft "
+                    "model: pass draft_cfg and draft_params"
+                )
+            if scheduler != "continuous":
+                raise ValueError(
+                    "speculative decoding requires the continuous "
+                    "scheduler's paged cache"
+                )
+            if prefill_chunk > 1:
+                raise ValueError(
+                    "speculative decoding runs its own multi-token "
+                    "verification window; combine it with prefill_chunk=1"
+                )
+        elif draft_cfg is not None or draft_params is not None:
+            raise ValueError(
+                "a draft model was provided but spec_k is 0; pass "
+                "spec_k >= 1 to enable speculative decoding"
+            )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -248,6 +276,10 @@ class ServeEngine:
         self.prefill_budget = prefill_budget
         self.kv_dtype = kv_dtype
         self.share_prefixes = share_prefixes
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.sample_seed = int(sample_seed)
+        self.spec_k = int(spec_k)
         self.queue: Deque[Request] = deque()
         self.completed: Dict[int, Request] = {}
         # slot accounting (Eq. 1 analogue): fused steps are vector issues,
@@ -263,6 +295,14 @@ class ServeEngine:
         self.physical_blocks = 0
         self.shared_block_hits = 0
         self.cow_copies = 0
+        # speculative-decoding accounting (all zero when spec_k == 0, so
+        # the ledger schema is identical across +spec forks): exact token
+        # counters plus the two step clocks — draft fused calls vs target
+        # fused calls (the latter mirrors self.steps)
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rejected_tokens = 0
+        self.draft_steps = 0
         #: step hooks (see module docstring): traffic feeders, fault plans
         self.step_hooks: List[StepHook] = []
         #: uid -> physical block ids the request occupied, in allocation
@@ -274,6 +314,22 @@ class ServeEngine:
         self._reset_slots = _jit_reset_slots()
         self._copy_block = _jit_copy_block()
         self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
+        self._sampler = SlotSampler(
+            cfg.vocab, temperature=self.temperature, top_k=self.top_k,
+            seed=self.sample_seed,
+        )
+        if self.spec_k > 0:
+            # imported here, not at module top: speculative.py reuses this
+            # module's jit factories, so the import is one-directional only
+            # at definition time
+            from repro.serve.speculative import SpeculativeDecoder
+            self._spec: Optional[SpeculativeDecoder] = SpeculativeDecoder(
+                draft_cfg, draft_params, self.spec_k, target_cfg=cfg,
+                block_size=block_size, temperature=self.temperature,
+                top_k=self.top_k, seed=self.sample_seed,
+            )
+        else:
+            self._spec = None
         # token-work budget for the drain-loop runaway guard: grows with
         # every submit (and preemption replay), so hook-fed traffic gets
         # the same exact occupancy bound pre-submitted traffic always had
@@ -350,6 +406,16 @@ class ServeEngine:
                 if w == self.prefill_chunk:
                     break
                 w *= 2
+        if self._spec is not None:
+            # speculative engines dispatch the (k+1)-wide verification
+            # scan (replay reuses the same trace) and the draft model's
+            # 1-wide step — warm both alongside the native decode step
+            out = self._prefill_paged(
+                self.params, jnp.zeros((B, self.spec_k + 1), jnp.int32),
+                cache, pos, bt, jnp.zeros((B,), jnp.int32),
+            )
+            jax.block_until_ready(out[0])
+            self._spec.warmup(self)
         out = self._decode_paged(
             self.params, jnp.zeros((B, 1), jnp.int32), cache, pos, bt
         )
@@ -451,7 +517,8 @@ class ServeEngine:
             self.busy_slot_steps += sum(1 for r in wave if not r.done)
             logits, cache = self._decode(self.params, _dev(tokens), cache)
             self.steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1))
+            slots = list(wave) + [None] * (B - len(wave))
+            nxt = self._sampler.select(logits, slots)[:, 0]
             for s, r in enumerate(wave):
                 if r.done:
                     continue
@@ -594,9 +661,7 @@ class ServeEngine:
                     _dev(positions), _dev(block_tables),
                 )
                 self.steps += 1
-                nxt = np.asarray(
-                    jnp.argmax(logits[:, 0, : self.cfg.vocab], axis=-1)
-                )
+                nxt = self._sampler.select(logits, slot_req)[:, 0]
                 for b, r in enumerate(slot_req):
                     if r is None:
                         continue
@@ -795,12 +860,11 @@ class ServeEngine:
                         _dev(lengths),
                     )
                 self.steps += 1
-                # one transfer: argmax of each slot's LAST fed row (only
+                # one transfer: select from each slot's LAST fed row (only
                 # slots that just consumed their final known token use it)
                 last = jnp.maximum(jnp.asarray(lengths) - 1, 0)
-                nxt = np.asarray(jnp.argmax(
-                    logits[jnp.arange(B), last, : self.cfg.vocab], axis=-1
-                ))
+                rows = logits[jnp.arange(B), last][:, None]
+                nxt = self._sampler.select(rows, slot_req)[:, 0]
                 for b, r in enumerate(slot_req):
                     if r is None or lengths[b] == 0:
                         continue
@@ -834,6 +898,8 @@ class ServeEngine:
         t0 = time.time()
         if self.scheduler == "wave":
             self._drain_waves(max_waves)
+        elif self._spec is not None:
+            self._spec.drain(self, max_steps)
         elif self.prefill_chunk > 1:
             self._drain_continuous_chunked(max_steps)
         else:
@@ -883,6 +949,19 @@ class ServeEngine:
             "cow_copies": self.cow_copies,
             "kv_bytes_served": kv_bytes_served,
             "kv_bytes_stored": kv_bytes_stored,
+            # speculative decoding: exact counters (zeros when off, so
+            # the schema is stable across +spec ledger forks) plus the
+            # Eq. 1 lane-utilization analogue — accepted drafts are the
+            # active lanes of each k-wide verification issue
+            "spec_k": self.spec_k,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "rejected_tokens": self.rejected_tokens,
+            "draft_steps": self.draft_steps,
+            "target_steps": self.steps,
+            "acceptance_rate": core_metrics.acceptance_rate(
+                self.accepted_tokens, self.drafted_tokens
+            ),
             # pure-SSM models page zero KV bytes; fall back to block-
             # granular units there so sharing still registers (the ratio
             # is unit-agnostic: served / stored)

@@ -1,0 +1,330 @@
+"""Speculative decoding contract (``repro.serve.speculative``).
+
+The subsystem's one promise: speculation changes STEP COUNTS, never
+BYTES.  Draft proposals are sampled from the same canonical per-request
+PRNG streams the target verifies with, so at temperature 0 (and at any
+temperature when draft == target) the served token streams are
+bit-identical to the non-speculative continuous engine — what changes
+is how many fused target steps the trace costs.
+
+* Self-speculation (draft == target, f32) accepts EVERY proposal and
+  spends strictly fewer fused target steps.
+* An adversarial draft (independently initialized weights) gets its
+  proposals rejected; rejection rewinds slot positions, decrefs the
+  over-allocated tail blocks, and restores SSM/conv state via replay —
+  with ``BlockPool.check_invariants()`` clean after every fused step
+  and the streams still byte-identical, on all six serve architectures.
+* Speculation composes with prefix sharing (COW) and int8 quantized
+  paging without perturbing their streams.
+* The ledger forks ``+spec<k>`` so the (by-design) lower step counters
+  never gate against the non-speculative trajectory; the scenario
+  matrix grows a ``speculate`` axis whose cells are checked against a
+  spec-off golden twin.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.perf.ledger import metrics_from_scenario, metrics_from_serving
+from repro.scenarios.matrix import (
+    ArrivalSpec, EosSpec, MatrixSpec, PromptSpec,
+)
+from repro.scenarios.runner import run_cell
+from repro.serve.engine import Request, ServeEngine
+from repro.train import steps as steps_mod
+
+SERVE_ARCHS = (
+    "gpt2-124m", "qwen3-1.7b", "mamba2-370m", "deepseek-v2-lite-16b",
+    "deepseek-moe-16b", "jamba-1.5-large-398b",
+)
+
+_MODELS = {}
+
+
+def _model(arch, init_seed=0):
+    key = (arch, init_seed)
+    if key not in _MODELS:
+        cfg = configs.get_smoke_config(arch)
+        _MODELS[key] = (
+            cfg, steps_mod.init_model(jax.random.PRNGKey(init_seed), cfg)
+        )
+    return _MODELS[key]
+
+
+def _traffic(cfg, n=4, seed=17, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.integers(1, cfg.vocab,
+                                    size=int(rng.integers(3, 9)))
+                .astype(np.int32),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def _invariant_hook(record):
+    """Step hook asserting the block pool invariants after every fused
+    step of a speculative drain (rewinds included).
+    ``check_invariants`` raises on violation; a recorded entry means one
+    clean check actually ran."""
+    def hook(eng, busy):
+        if eng._live is not None:
+            eng._live["pool"].check_invariants()
+            record.append(True)
+        return False
+    return hook
+
+
+def _serve(arch, *, spec_k=0, draft=None, hook=None, n=4, max_new=8,
+           **eng_kw):
+    cfg, params = _model(arch)
+    kw = dict(eng_kw)
+    if spec_k:
+        dcfg, dparams = draft
+        kw.update(spec_k=spec_k, draft_cfg=dcfg, draft_params=dparams)
+    eng = ServeEngine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                      scheduler="continuous", **kw)
+    if hook is not None:
+        eng.add_step_hook(hook)
+    for r in _traffic(cfg, n=n, max_new=max_new):
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng
+
+
+def _streams(eng):
+    return {uid: r.generated for uid, r in eng.completed.items()}
+
+
+# ---------------------------------------------------------------------------
+# self-speculation: full acceptance, strictly fewer target steps
+# ---------------------------------------------------------------------------
+
+
+def test_self_spec_accepts_everything_and_saves_steps():
+    base = _serve("gpt2-124m")
+    spec = _serve("gpt2-124m", spec_k=4, draft=_model("gpt2-124m"))
+    assert _streams(spec) == _streams(base)
+    s = spec.stats()
+    assert s["acceptance_rate"] == 1.0, s
+    assert s["rejected_tokens"] == 0
+    assert s["accepted_tokens"] == s["drafted_tokens"] > 0
+    assert s["spec_k"] == 4
+    assert s["draft_steps"] > 0
+    # the headline: verification amortizes decode — strictly fewer fused
+    # target steps for the same trace
+    assert s["target_steps"] < base.stats()["fused_steps"], (
+        s["target_steps"], base.stats()["fused_steps"])
+    assert s["target_steps"] == s["fused_steps"]
+
+
+def test_self_spec_bit_identical_at_temperature():
+    """Draft and target share the canonical sampling streams, so
+    self-speculation is exact at temperature > 0 too."""
+    kw = dict(temperature=0.8, top_k=10, sample_seed=42)
+    base = _serve("gpt2-124m", **kw)
+    spec = _serve("gpt2-124m", spec_k=4, draft=_model("gpt2-124m"), **kw)
+    assert _streams(spec) == _streams(base)
+    assert spec.stats()["acceptance_rate"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# adversarial draft: rejection-heavy, streams unchanged, pool clean
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", SERVE_ARCHS)
+def test_adversarial_draft_streams_identical_every_arch(arch):
+    """An independently-initialized gpt2 draft proposes garbage; the
+    verifier rejects, rewinds positions, decrefs tail blocks (and
+    replays SSM/conv state on the stateful paths) — and the streams
+    stay byte-identical to the non-speculative engine on dense, GQA,
+    MLA, MoE, SSM and hybrid serve paths, with the pool invariants
+    clean after every step."""
+    base = _serve(arch, max_new=6)
+    checks = []
+    adv = _serve(arch, spec_k=3, draft=_model("gpt2-124m", init_seed=123),
+                 hook=_invariant_hook(checks), max_new=6)
+    assert _streams(adv) == _streams(base), arch
+    s = adv.stats()
+    assert s["drafted_tokens"] > 0
+    assert s["rejected_tokens"] > 0, (
+        f"{arch}: an adversarial draft must actually get rejected")
+    assert s["acceptance_rate"] < 1.0
+    assert checks and all(checks), f"{arch}: pool invariants violated"
+
+
+def test_rejection_rewind_frees_tail_blocks():
+    """After a rejection-heavy drain no speculative over-allocation
+    leaks: every pool block is released once the queue drains (the
+    engine absorbs the pool on drain, so leaks would trip the hook's
+    invariant checks and the final accounting)."""
+    checks = []
+    adv = _serve("gpt2-124m", spec_k=4,
+                 draft=_model("gpt2-124m", init_seed=123),
+                 hook=_invariant_hook(checks))
+    s = adv.stats()
+    assert s["rejected_tokens"] > 0
+    assert checks and all(checks)
+    # drained engine: no live batch, all requests completed
+    assert adv._live is None
+    assert len(adv.completed) == 4
+
+
+# ---------------------------------------------------------------------------
+# composition: quantized paging + prefix sharing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype,share", [("int8", True), ("bf16", False)])
+def test_spec_composes_with_quantized_sharing(kv_dtype, share):
+    """Speculation on an int8/bf16 paged pool with COW prefix sharing:
+    streams match the spec-off engine under the SAME pool config (the
+    twin isolates speculation; quantization drift is its own axis)."""
+    kw = dict(kv_dtype=kv_dtype, share_prefixes=share)
+    base = _serve("gpt2-124m", **kw)
+    checks = []
+    spec = _serve("gpt2-124m", spec_k=4, draft=_model("gpt2-124m"),
+                  hook=_invariant_hook(checks), **kw)
+    assert _streams(spec) == _streams(base)
+    s = spec.stats()
+    assert s["drafted_tokens"] > 0
+    assert checks and all(checks)
+    if share:
+        assert s["share_prefixes"] is True
+
+
+# ---------------------------------------------------------------------------
+# validation + stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_spec_requires_draft_and_continuous():
+    cfg, params = _model("gpt2-124m")
+    dcfg, dparams = _model("gpt2-124m")
+    with pytest.raises(ValueError, match="requires a draft"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k must be >= 0"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64, spec_k=-1)
+    with pytest.raises(ValueError, match="continuous"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64, scheduler="wave",
+                    spec_k=4, draft_cfg=dcfg, draft_params=dparams)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64, prefill_chunk=4,
+                    spec_k=4, draft_cfg=dcfg, draft_params=dparams)
+    with pytest.raises(ValueError, match="spec_k >= 1"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64,
+                    draft_cfg=dcfg, draft_params=dparams)
+
+
+def test_stateful_draft_rejected():
+    """The draft runs a plain (non-paged-state) prefill loop, so SSM /
+    hybrid drafts are refused up front, not mid-drain."""
+    cfg, params = _model("gpt2-124m")
+    scfg, sparams = _model("mamba2-370m")
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, max_batch=2, max_len=64,
+                    spec_k=4, draft_cfg=scfg, draft_params=sparams)
+
+
+# ---------------------------------------------------------------------------
+# ledger: the +spec<k> fork
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_forks_spec_key_with_counters():
+    spec = _serve("gpt2-124m", spec_k=4, draft=_model("gpt2-124m"))
+    report = {"kind": "serve_report", "arch": "gpt2-124m",
+              "scheduler": "continuous", "spec_k": 4,
+              "stats": spec.stats(), "requests": []}
+    (key, row), = metrics_from_serving(report).items()
+    assert key == "serve/gpt2-124m@continuous+spec4"
+    for name in ("spec_k", "drafted_tokens", "accepted_tokens",
+                 "rejected_tokens", "draft_steps", "target_steps",
+                 "acceptance_rate"):
+        assert name in row, name
+    assert row["acceptance_rate"] == 1.0
+    assert isinstance(row["drafted_tokens"], int)
+    # spec-off reports keep the unforked key and zero counters
+    base = _serve("gpt2-124m")
+    report0 = {"kind": "serve_report", "arch": "gpt2-124m",
+               "scheduler": "continuous", "spec_k": 0,
+               "stats": base.stats(), "requests": []}
+    (key0, row0), = metrics_from_serving(report0).items()
+    assert key0 == "serve/gpt2-124m@continuous"
+    assert row0["drafted_tokens"] == 0 and row0["acceptance_rate"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# scenario matrix: the speculate axis and its spec-off golden twin
+# ---------------------------------------------------------------------------
+
+
+def _spec_matrix(**over):
+    kw = dict(
+        arrivals=[ArrivalSpec(kind="poisson", rate=0.5)],
+        prompts=[PromptSpec(kind="uniform", lo=4, hi=10)],
+        eos=[EosSpec(p_early=0.1)],
+        schedulers=["continuous"],
+        archs=["gpt2-124m"],
+        faults=["none"],
+        speculate=[4],
+        requests=4,
+        max_new=4,
+        max_batch=2,
+        max_len=64,
+        block_size=8,
+    )
+    kw.update(over)
+    return MatrixSpec(**kw)
+
+
+def test_speculate_axis_expansion():
+    spec = _spec_matrix(speculate=[0, 4])
+    cells = spec.cells()
+    ks = sorted(c.spec_k for c in cells)
+    assert ks == [0, 4]
+    on, = [c for c in cells if c.spec_k == 4]
+    off, = [c for c in cells if c.spec_k == 0]
+    assert on.cell_id.endswith("/spec4")
+    assert "spec" not in off.cell_id
+    # speculation is outside the traffic key: both cells replay the
+    # exact same seeded request trace
+    assert on.traffic_key == off.traffic_key
+    twin = on.spec_twin()
+    assert twin.spec_k == 0 and twin.fault == "none"
+    # wave cells never speculate
+    assert all(c.spec_k == 0
+               for c in _spec_matrix(schedulers=["wave"],
+                                     speculate=[0, 4]).cells())
+
+
+def test_spec_cell_matches_spec_off_twin():
+    cell, = _spec_matrix().cells()
+    r = run_cell(cell)
+    assert r.error == ""
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["spec_k"] == 4
+    assert r.stats["drafted_tokens"] > 0
+    assert r.stats["acceptance_rate"] == 1.0  # self-draft in the runner
+    rep = r.report()
+    assert rep["spec_k"] == 4
+    (key, row), = metrics_from_scenario(rep).items()
+    assert key.endswith("/spec4")
+    assert row["acceptance_rate"] == 1.0
+    assert row["golden_ok"] is True
+
+
+def test_spec_cell_survives_preemption():
+    """Preempting mid-speculation must rewind AND replay cleanly: the
+    faulted spec cell still matches its fault-free golden twin and its
+    spec-off twin."""
+    cell, = _spec_matrix(faults=["preempt"]).cells()
+    r = run_cell(cell)
+    assert r.error == ""
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["preemptions"] >= 1
+    assert r.stats["drafted_tokens"] > 0

@@ -154,6 +154,49 @@ def block_dedup_ratio(bytes_served: float, bytes_stored: float) -> float:
     return bytes_served / bytes_stored
 
 
+def device_lane_utilization(
+    busy_lane_steps: Sequence[float], steps: float, lanes_per_device: int
+) -> float:
+    """Busy-lane fraction of the *worst* device shard — Eq. 1 one level up.
+
+    A mesh of devices is the vector-lane question at the next scale: each
+    fused step issues once across every device, and a device's "lanes" are
+    the batch slots its data shard owns.  ``busy_lane_steps[i]`` counts busy
+    (slot, step) pairs on shard ``i``; each shard's utilization is its busy
+    count over ``steps * lanes_per_device``, and the reported figure is the
+    minimum over shards — the straggler lane that bounds the whole issue,
+    exactly as one predicated-out SVE lane still burns its issue slot.  On
+    a single shard (1x1 mesh, or no mesh) this degenerates to
+    :func:`slot_utilization`.  Deterministic (pure slot accounting), so the
+    perf ledger gates it at tol 0.
+    """
+    counts = list(busy_lane_steps)
+    if steps <= 0 or lanes_per_device <= 0 or not counts:
+        return 0.0
+    return min(
+        min(1.0, b / (steps * lanes_per_device)) for b in counts
+    )
+
+
+def expert_imbalance(expert_loads: Sequence[float]) -> float:
+    """Max-over-mean load across expert-parallel shards — the EP variant of
+    :func:`device_lane_utilization`.
+
+    Under expert parallelism each device owns ``E / model`` experts, and a
+    fused MoE step finishes only when the most-loaded shard drains — the
+    straggler factor is ``max(load) / mean(load)``.  1.0 is a perfectly
+    balanced router (every "lane" equally busy, Eq. 1's utilization = 1);
+    ``n_shards`` is the pathological one-hot router where one device does
+    all the work while the rest idle through the issue.  Degenerate input
+    (no load observed) reports the balanced baseline 1.0.
+    """
+    loads = [max(0.0, float(x)) for x in expert_loads]
+    total = sum(loads)
+    if not loads or total <= 0:
+        return 1.0
+    return max(loads) * len(loads) / total
+
+
 def arithmetic_intensity(flops: float, hbm_bytes: float) -> float:
     """AI = FLOPs / bytes moved from main memory (paper Sec. 3.3)."""
     if hbm_bytes <= 0:

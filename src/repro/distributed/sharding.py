@@ -115,6 +115,30 @@ def param_shardings(params: Any, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(f, params)
 
 
+def serve_param_shardings(params: Any, mesh: Mesh):
+    """:func:`param_shardings` with the serve-path mamba exception.
+
+    On a 2-D mesh (data AND model axes both > 1), model-sharded mamba
+    block leaves are partially replicated across the data axis — a layout
+    the CPU SPMD partitioner miscompiles inside the selective-scan ops
+    (mesh_check caught 2x2 mamba streams diverging where every
+    single-axis mesh is byte-exact).  Serving therefore replicates leaves
+    under a ``mamba`` path segment on 2-D meshes; attention and MoE
+    leaves keep their Megatron split (verified exact at 2x2), and
+    single-axis meshes keep full mamba sharding.
+    """
+    sh = param_shardings(params, mesh)
+    m = axis_size(mesh, "model")
+    if m <= 1 or mesh.devices.size == m:
+        return sh
+    rep = NamedSharding(mesh, P())
+
+    def f(path, s):
+        return rep if "mamba" in _path_str(path).split("/") else s
+
+    return jax.tree_util.tree_map_with_path(f, sh)
+
+
 # --------------------------------------------------------------------------
 # activations / inputs
 # --------------------------------------------------------------------------
@@ -202,6 +226,92 @@ def _cache_spec(pstr: str, shape, mesh: Mesh, batch: int) -> P:
         elif shape[seq_axis] % dp_size == 0:
             dims[seq_axis] = dp_axes
     return P(*dims)
+
+
+# --------------------------------------------------------------------------
+# paged serve caches (ServeEngine block pools; also the speculative draft's)
+# --------------------------------------------------------------------------
+
+
+def paged_cache_spec(key: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one leaf of a paged serve cache (by leaf name).
+
+    The block pool is sharded along the *head* axis over ``model`` — the
+    block axis stays replicated so any slot's block table can point at any
+    physical block without cross-device gathers.  Per-leaf rules:
+
+      * ``k``/``v`` pools ``(nsb, n_blocks, bs, KV, hd)``: KV heads over
+        ``model`` when divisible (matches column-parallel wk/wv, so commits
+        scatter locally).
+      * ``*_scale`` int8 pools: replicated — every device holds the full
+        per-row fp32 scale pool (scales are per token row, not per head, so
+        each head shard needs all of them; a few bytes/row).
+      * MLA ``c``/``k_rope`` latent pools: replicated — the latent cache is
+        per-token, not per-head; the head split lives in the absorbed
+        w_uk/w_uv projections, which the param rules already shard.
+      * ``ssm_state`` ``(nsb, B, H, d_state, hd)``: heads over ``model``,
+        slots over the data axes (the recurrence is elementwise per slot).
+      * ``conv_state`` ``(nsb, B, d_conv-1, ch)``: channels over ``model``
+        (aligned with the column-parallel conv_x/wx), slots over data.
+
+    Every rule is divisibility-gated with replication as the fallback, so
+    sharding is pure placement — never semantics.
+    """
+    m = axis_size(mesh, "model")
+    dp = data_axes(mesh)
+    dp_axes = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    dims = [None] * len(shape)
+    if key.endswith("_scale"):
+        return P(*dims)
+    if key in ("k", "v") and len(shape) >= 4:
+        head_ax = len(shape) - 2  # (..., n_blocks, bs, KV, hd)
+        if shape[head_ax] % m == 0:
+            dims[head_ax] = "model"
+        return P(*dims)
+    # SSM leaves shard only on a SINGLE-axis mesh: partially-replicated
+    # mamba scan operands (a leaf sharded on one axis of a 2-D mesh,
+    # replicated on the other) miscompile under the CPU SPMD partitioner
+    # — mesh_check caught 2x2 streams diverging where 2x1/1x2 were exact —
+    # so on 2-D meshes the recurrent state stays replicated (placement
+    # only; the attention pools still split).
+    flat = mesh.devices.size
+    if key == "ssm_state" and len(shape) == 5:
+        if m > 1 and flat == m and shape[2] % m == 0:
+            dims[2] = "model"
+        elif dp and flat == dp_size and shape[1] % dp_size == 0:
+            dims[1] = dp_axes
+        return P(*dims)
+    if key == "conv_state" and len(shape) == 4:
+        if m > 1 and flat == m and shape[-1] % m == 0:
+            dims[-1] = "model"
+        elif dp and flat == dp_size and shape[1] % dp_size == 0:
+            dims[1] = dp_axes
+        return P(*dims)
+    return P(*dims)  # MLA latent pools and anything unrecognized: replicate
+
+
+def paged_cache_shardings(cache: Any, mesh: Mesh):
+    """NamedSharding pytree for a `transformer.init_paged_cache` pytree.
+
+    Applies equally to the target cache and the speculative draft's cache
+    (the draft is attention-only, so only the k/v + scale rules fire).
+    """
+
+    def f(path, leaf):
+        key = _path_str(path).split("/")[-1]
+        return NamedSharding(mesh, paged_cache_spec(key, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """The replicated sharding — host-side slot accounting (positions,
+    block tables, free list, sampler inputs) lives identically on every
+    device; only pools and params split."""
+    return NamedSharding(mesh, P())
 
 
 # --------------------------------------------------------------------------

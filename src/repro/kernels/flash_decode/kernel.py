@@ -175,6 +175,7 @@ def flash_decode_paged(
     *,
     k_scale: jax.Array = None,  # (n_blocks, block_size) f32 — int8 pools
     v_scale: jax.Array = None,
+    head_shard: tuple = None,   # (shard_idx, n_shards) — local KV heads only
     interpret: bool = True,
 ) -> jax.Array:
     """Flash-decode over a PAGED cache: the continuous-batching serve path.
@@ -193,7 +194,28 @@ def flash_decode_paged(
     heads and the D axis — and each KV tile is dequantized in VMEM after
     the (4x smaller) DMA.  bf16 pools need no scales; the tile is widened
     to the query dtype before the contraction.
+
+    Head sharding (tensor-parallel serving): ``head_shard=(i, n)`` runs
+    only shard ``i``'s contiguous 1/n of the KV heads — q and the pools
+    are sliced on their head axes and the output shrinks to ``(B, KV/n,
+    G, D)``.  Attention is embarrassingly parallel over heads (softmax
+    normalizes within a head), so shard outputs concatenate exactly to
+    the unsharded result; per-row scales are head-agnostic and pass
+    through whole.  :func:`flash_decode_paged_sharded` drives one such
+    slice per device of a mesh's model axis via ``shard_map``.
     """
+    if head_shard is not None:
+        idx, n = head_shard
+        kv_total = q.shape[1]
+        if not 0 <= idx < n:
+            raise ValueError(f"head_shard index {idx} outside [0, {n})")
+        if kv_total % n:
+            raise ValueError(
+                f"{kv_total} KV heads not divisible into {n} shards")
+        per = kv_total // n
+        q = q[:, idx * per:(idx + 1) * per]
+        k_pool = k_pool[:, :, idx * per:(idx + 1) * per]
+        v_pool = v_pool[:, :, idx * per:(idx + 1) * per]
     B, KV, G, D = q.shape
     bs = k_pool.shape[1]
     nb = block_tables.shape[1]
@@ -237,6 +259,69 @@ def flash_decode_paged(
         out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
         interpret=interpret,
     )(*operands)
+
+
+def flash_decode_paged_sharded(
+    q: jax.Array,             # (B, KV, G, D)
+    k_pool: jax.Array,        # (n_blocks, block_size, KV, D)
+    v_pool: jax.Array,        # (n_blocks, block_size, KV, D)
+    block_tables: jax.Array,  # (B, nb) int32
+    valid_len: jax.Array,     # (B,) int32
+    *,
+    mesh,                     # jax Mesh with a "model" axis
+    axis: str = "model",
+    k_scale: jax.Array = None,
+    v_scale: jax.Array = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tensor-parallel paged flash-decode: one kernel launch per device of
+    the mesh's ``axis``, each over its local 1/n of the KV heads.
+
+    The pools shard on their head axis (``P(None, None, axis, None)`` —
+    the block axis stays replicated so block tables resolve without
+    cross-device gathers, matching the serving engine's head-sharded
+    block-pool layout), the block table / lengths / per-row scales
+    replicate, and the per-shard outputs concatenate on the head axis.
+    No collective is needed: softmax normalizes within a head.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = int(mesh.shape[axis])
+    KV = q.shape[1]
+    if KV % n:
+        raise ValueError(f"{KV} KV heads not divisible over {n} "
+                         f"{axis!r}-axis devices")
+    head_q = P(None, axis, None, None)
+    head_pool = P(None, None, axis, None)
+    rep = P(*(None,) * 2)
+    rep1 = P(None)
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        raise ValueError("k_scale and v_scale must be passed together")
+
+    if quantized:
+        def local(qi, kp, vp, bt, vl, ks, vs):
+            return flash_decode_paged(qi, kp, vp, bt, vl, k_scale=ks,
+                                      v_scale=vs, interpret=interpret)
+
+        fn = shard_map(
+            local, mesh=mesh,
+            in_specs=(head_q, head_pool, head_pool, rep, rep1, rep, rep),
+            out_specs=head_q, check_rep=False,
+        )
+        return fn(q, k_pool, v_pool, block_tables, valid_len,
+                  k_scale, v_scale)
+
+    def local(qi, kp, vp, bt, vl):
+        return flash_decode_paged(qi, kp, vp, bt, vl, interpret=interpret)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(head_q, head_pool, head_pool, rep, rep1),
+        out_specs=head_q, check_rep=False,
+    )
+    return fn(q, k_pool, v_pool, block_tables, valid_len)
 
 
 # ---------------------------------------------------------------------------

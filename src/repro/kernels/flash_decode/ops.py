@@ -11,13 +11,18 @@ same-shaped-ref contract for event capture.
 
 from __future__ import annotations
 
-from repro.kernels.flash_decode.kernel import flash_decode_paged, flash_prefill_paged
+from repro.kernels.flash_decode.kernel import (
+    flash_decode_paged,
+    flash_decode_paged_sharded,
+    flash_prefill_paged,
+)
 from repro.kernels.registry import FLASH_DECODE as flash_decode
 from repro.kernels.registry import FLASH_PREFILL as flash_prefill
 
 __all__ = [
     "flash_decode",
     "flash_decode_paged",
+    "flash_decode_paged_sharded",
     "flash_prefill",
     "flash_prefill_paged",
 ]

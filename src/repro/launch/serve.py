@@ -55,6 +55,8 @@ def build_report(args: argparse.Namespace, engine: ServeEngine,
         "share_prefixes": engine.share_prefixes,
         "draft": getattr(args, "draft", None),
         "spec_k": engine.spec_k,
+        "spec_adaptive": engine.spec_adaptive,
+        "mesh": engine.mesh_shape,
         "temperature": engine.temperature,
         "top_k": engine.top_k,
         "sample_seed": engine.sample_seed,
@@ -116,6 +118,14 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-k", type=int, default=0,
                     help="draft tokens proposed per slot per fused target "
                          "step (0 = speculation off)")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="adapt the per-slot draft width from the trailing "
+                         "acceptance EMA, clamped to [0, --spec-k]")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve tensor-parallel over a data-x-model device "
+                         "mesh, e.g. 2x2 (use XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N to fake "
+                         "N host devices; continuous scheduler only)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -133,6 +143,16 @@ def main(argv=None) -> int:
     ap.add_argument("--record", action="store_true",
                     help="append serving metrics to the perf ledger")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import (MeshShapeError, make_serve_mesh,
+                                       parse_mesh)
+
+        try:
+            mesh = make_serve_mesh(*parse_mesh(args.mesh))
+        except MeshShapeError as e:
+            ap.error(str(e))
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -158,7 +178,8 @@ def main(argv=None) -> int:
                          share_prefixes=args.share_prefixes,
                          temperature=args.temperature, top_k=args.top_k,
                          sample_seed=args.sample_seed, spec_k=args.spec_k,
-                         draft_cfg=draft_cfg, draft_params=draft_params)
+                         draft_cfg=draft_cfg, draft_params=draft_params,
+                         spec_adaptive=args.spec_adaptive, mesh=mesh)
     if args.warmup:
         engine.warmup()
 
@@ -206,8 +227,13 @@ def main(argv=None) -> int:
               f"({stats['shared_block_hits']} shared hits, "
               f"{stats['cow_copies']} COW copies, "
               f"dedup {stats['block_dedup_ratio']:.3f})")
+    if engine.mesh is not None:
+        print(f"  mesh {stats['mesh']} ({stats['mesh_devices']} devices), "
+              f"device lane utilization "
+              f"{stats['device_lane_utilization']:.3f}")
     if engine.spec_k > 0:
-        print(f"  speculative: draft {args.draft} k={engine.spec_k}, "
+        print(f"  speculative: draft {args.draft} k={engine.spec_k}"
+              + (" (adaptive width)" if engine.spec_adaptive else "") + ", "
               f"acceptance {stats['acceptance_rate']:.3f} "
               f"({stats['accepted_tokens']}/{stats['drafted_tokens']} "
               f"drafts accepted, {stats['draft_steps']} draft steps, "

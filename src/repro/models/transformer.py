@@ -414,7 +414,7 @@ def _pool_dtype(cfg: ModelConfig, kv_dtype: str):
 
 def init_paged_cache(
     cfg: ModelConfig, slots: int, max_len: int, block_size: int,
-    kv_dtype: str = "f32",
+    kv_dtype: str = "f32", *, mesh=None,
 ) -> Dict[str, Any]:
     """Paged cache pytree: attention caches become pooled blocks.
 
@@ -468,6 +468,10 @@ def init_paged_cache(
                 )
         return c
 
+    # mesh != None: place every pool by the serve sharding rules (k/v head
+    # axis split over `model`, SSM heads/conv channels likewise, scale and
+    # MLA latent pools replicated) — a pure-placement device_put, so the
+    # sharded cache is byte-identical to the replicated one
     for i, kind in enumerate(cfg.superblock):
         if kind == LayerKind.ATTN:
             c = _attn_pool(nsb)
@@ -486,6 +490,11 @@ def init_paged_cache(
         cache["blocks"][f"slot{i}"] = c
     if cfg.moe is not None and cfg.moe.first_dense:
         cache["first_block"] = jax.tree.map(lambda a: a[0], _attn_pool(1))
+    if mesh is not None:
+        from repro.distributed import sharding as shard_rules
+        cache = jax.device_put(
+            cache, shard_rules.paged_cache_shardings(cache, mesh)
+        )
     return cache
 
 

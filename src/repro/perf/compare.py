@@ -104,6 +104,12 @@ SPECS: Dict[str, MetricSpec] = {
         MetricSpec("draft_steps", "higher", 0.0),
         MetricSpec("target_steps", "higher", 0.0),
         MetricSpec("spec_k", "lower", 0.0),
+        # tensor-parallel serving: both exact given the trace + mesh shape
+        # (each +mesh<DxM> fork is its own trajectory).  The worst device
+        # shard's busy-lane fraction falling means the mesh started
+        # idling a device's lanes — Eq. 1's regression one level up.
+        MetricSpec("device_lane_utilization", "lower", 0.0),
+        MetricSpec("mesh_devices", "lower", 0.0),
     )
 }
 

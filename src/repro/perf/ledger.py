@@ -302,6 +302,10 @@ _SERVING_METRICS = (
     # fraction of each k-wide verification issue
     "spec_k", "drafted_tokens", "accepted_tokens", "rejected_tokens",
     "draft_steps", "target_steps", "acceptance_rate",
+    # tensor-parallel serving: device count is placement config, and
+    # device_lane_utilization (worst device shard's busy-lane fraction,
+    # Eq. 1 one level up) is pure slot accounting — both exact
+    "mesh_devices", "device_lane_utilization",
 )
 
 #: _SERVING_METRICS names that are exact counters (held tight by the gate);
@@ -312,7 +316,7 @@ _SERVING_INT_METRICS = frozenset((
     "logical_blocks", "physical_blocks", "shared_block_hits",
     "cow_copies", "kv_bytes_served", "kv_bytes_stored",
     "spec_k", "drafted_tokens", "accepted_tokens", "rejected_tokens",
-    "draft_steps", "target_steps",
+    "draft_steps", "target_steps", "mesh_devices",
 ))
 
 
@@ -355,6 +359,16 @@ def metrics_from_serving(report: Mapping[str, Any]) -> Dict[str, Dict[str, Any]]
     spec_k = int(report.get("spec_k", stats.get("spec_k", 0)) or 0)
     if spec_k > 0:
         key += f"+spec{spec_k}"
+        # adaptive width is a different drafted/accepted trajectory by
+        # design (that's the point) — never gate it against fixed-width
+        if report.get("spec_adaptive", stats.get("spec_adaptive")):
+            key += "+adapt"
+    # mesh placement forks the trajectory too: fused-step counters are
+    # identical across shapes (the golden contract), but wall metrics and
+    # device_lane_utilization are per-shape quantities
+    mesh = report.get("mesh", stats.get("mesh"))
+    if mesh:
+        key += f"+mesh{mesh}"
     row = _serving_row(stats)
     # submit-time rejections live on the report, not in engine stats: the
     # engine never saw those requests (launch.serve counts them)

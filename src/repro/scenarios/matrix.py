@@ -2,7 +2,7 @@
 
 A :class:`MatrixSpec` names one value-list per traffic axis — arrival
 process x prompt-length distribution x EOS-probability x scheduler x
-architecture x fault plan — and :meth:`MatrixSpec.cells` expands the
+architecture x fault plan x device mesh — and :meth:`MatrixSpec.cells` expands the
 cartesian product into :class:`Scenario` cells (skipping combinations a
 fault plan declares invalid, e.g. slot preemption under the lockstep wave
 scheduler, which has no slots to preempt).
@@ -196,6 +196,12 @@ class Scenario:
     #: golden baseline is the SAME cell with speculation off
     #: (:meth:`spec_twin`), which must serve byte-identical streams.
     spec_k: int = 0
+    #: device-mesh axis: None = single-device serving, "DxM" = the engine
+    #: shards params and the paged KV pool over a data-x-model host mesh
+    #: (continuous only).  Sharding never changes the sampled traffic — a
+    #: meshed cell's golden baseline is the SAME cell unsharded
+    #: (:meth:`mesh_twin`), which must serve byte-identical streams.
+    mesh: Optional[str] = None
 
     def __post_init__(self):
         if self.prompt_sharing not in ("none", "shared", "shared-off"):
@@ -203,6 +209,10 @@ class Scenario:
                 f"unknown prompt_sharing {self.prompt_sharing!r}")
         if self.spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {self.spec_k}")
+        if self.mesh is not None:
+            from repro.launch.mesh import parse_mesh
+
+            parse_mesh(self.mesh)  # raises MeshShapeError on junk
 
     @property
     def share_prefixes(self) -> bool:
@@ -239,6 +249,8 @@ class Scenario:
             parts.append(self.prompt_sharing)
         if self.spec_k > 0:
             parts.append(f"spec{self.spec_k}")
+        if self.mesh is not None:
+            parts.append(f"m{self.mesh}")
         return "/".join(parts)
 
     @property
@@ -275,6 +287,13 @@ class Scenario:
         byte-identical streams — speculation may only change how many
         fused target steps they cost."""
         return dataclasses.replace(self, fault="none", spec_k=0)
+
+    def mesh_twin(self) -> "Scenario":
+        """The unsharded golden twin of a meshed cell: same traffic (the
+        mesh axis is outside the traffic key), fault-free, ``mesh=None``.
+        The sharded engine must serve byte-identical streams — the mesh
+        may only change where the math runs."""
+        return dataclasses.replace(self, fault="none", mesh=None)
 
 
 def cell_seed(spec_seed: int, traffic_key: str) -> int:
@@ -320,6 +339,14 @@ class MatrixSpec:
     #: against their speculation-off twin by the runner
     speculate: List[int] = dataclasses.field(
         default_factory=lambda: [0])
+    #: device-mesh axis (None = single device, "DxM" = tensor-parallel
+    #: serving over a data-x-model host mesh): meshed cells run
+    #: continuous-only and are golden-diffed against their unsharded
+    #: twin by the runner.  Shapes needing more devices than the process
+    #: has are an execution-time failure, not an expansion-time skip —
+    #: force host devices via XLA_FLAGS to run them.
+    meshes: List[Optional[str]] = dataclasses.field(
+        default_factory=lambda: [None])
     requests: int = 6
     max_new: int = 8
     max_batch: int = 2
@@ -341,9 +368,9 @@ class MatrixSpec:
         combos = itertools.product(
             self.archs, self.schedulers, self.arrivals, self.prompts,
             self.eos, self.faults, self.prefill_chunks, self.prompt_sharing,
-            self.speculate,
+            self.speculate, self.meshes,
         )
-        for arch, sched, arr, pr, eo, fault, pc, ps, sk in combos:
+        for arch, sched, arr, pr, eo, fault, pc, ps, sk, mesh in combos:
             if pc > 1 and sched != "continuous":
                 continue  # wave has no chunked path
             if ps != "none" and sched != "continuous":
@@ -352,6 +379,8 @@ class MatrixSpec:
                 continue  # speculation verifies over the paged cache
             if sk > 0 and pc > 1:
                 continue  # speculation owns the multi-token window
+            if mesh is not None and sched != "continuous":
+                continue  # only the paged continuous path is sharded
             cell = Scenario(
                 arrival=arr, prompt=pr, eos=eo,
                 scheduler=sched, arch=arch, fault=fault,
@@ -365,6 +394,7 @@ class MatrixSpec:
                 prefill_budget=self.prefill_budget if pc > 1 else None,
                 prompt_sharing=ps,
                 spec_k=sk,
+                mesh=mesh,
             )
             if not get_plan(fault).applies_to(cell):
                 continue
@@ -443,6 +473,7 @@ def full_matrix() -> MatrixSpec:
         faults=["none", "preempt", "device-loss", "malformed"],
         prompt_sharing=["none", "shared"],
         speculate=[0, 4],
+        meshes=[None, "1x1"],
         requests=8,
         max_new=8,
         max_batch=2,

@@ -74,6 +74,24 @@ def _spec_kwargs(cell: Scenario) -> Dict[str, Any]:
             "draft_params": draft_params}
 
 
+# one jax Mesh per shape, shared across cells (and threads, and the
+# per-chunk engines the resilient path rebuilds after a simulated device
+# loss — re-entering _mesh_for on restart IS the resharding path)
+_MESH_LOCK = threading.Lock()
+_MESHES: Dict[str, Any] = {}
+
+
+def _mesh_for(cell: Scenario):
+    if cell.mesh is None:
+        return None
+    from repro.launch.mesh import make_serve_mesh, parse_mesh
+
+    with _MESH_LOCK:
+        if cell.mesh not in _MESHES:
+            _MESHES[cell.mesh] = make_serve_mesh(*parse_mesh(cell.mesh))
+        return _MESHES[cell.mesh]
+
+
 class TrafficFeeder:
     """Step hook delivering the sampled trace on the engine's step clock.
 
@@ -141,6 +159,7 @@ def _execute_engine(cell: Scenario, cfg, params,
         prefill_chunk=cell.prefill_chunk,
         prefill_budget=cell.prefill_budget,
         share_prefixes=cell.share_prefixes,
+        mesh=_mesh_for(cell),
         **_spec_kwargs(cell),
     )
     feeder = TrafficFeeder(trace)
@@ -202,6 +221,7 @@ def _execute_resilient(cell: Scenario, cfg, params,
             prefill_chunk=cell.prefill_chunk,
             prefill_budget=cell.prefill_budget,
             share_prefixes=cell.share_prefixes,
+            mesh=_mesh_for(cell),
             **_spec_kwargs(cell),
         )
         feeder = TrafficFeeder(rebased)
@@ -266,6 +286,14 @@ def _execute_resilient(cell: Scenario, cfg, params,
         "prefill_chunk": cell.prefill_chunk,
         "share_prefixes": cell.share_prefixes,
         "spec_k": cell.spec_k,
+        "mesh": cell.mesh,
+        "mesh_devices": max(
+            (int(o["stats"].get("mesh_devices", 1)) for o in obs), default=1),
+        # the min over chunk engines: the cell's worst device-lane
+        # utilization across the whole (possibly restarted) run
+        "device_lane_utilization": min(
+            (float(o["stats"].get("device_lane_utilization", 0.0))
+             for o in obs), default=0.0),
         **{k: totals[k] for k in ("requests", "new_tokens", "fused_steps",
                                   "busy_slot_steps", "slot_steps",
                                   "preemptions", "logical_blocks",
@@ -351,6 +379,7 @@ class CellResult:
             "prefill_budget": self.cell.prefill_budget,
             "prompt_sharing": self.cell.prompt_sharing,
             "spec_k": self.cell.spec_k,
+            "mesh": self.cell.mesh,
             "seed": self.cell.seed,
             "ok": self.ok,
             "stats": self.stats,
@@ -463,6 +492,20 @@ def run_cell(cell: Scenario, *, check_twin: bool = True) -> CellResult:
                 and not result.stats.get("drafted_tokens", 0)):
             result.golden_diffs.append(
                 "[vs spec-off] speculative cell drafted zero tokens")
+    if cell.mesh is not None and check_twin:
+        # the mesh axis gets golden treatment too: the sharded engine must
+        # serve the unsharded twin's exact streams — head/expert/data
+        # sharding may move the math across devices, never change it
+        try:
+            mtwin = _execute(cell.mesh_twin(), inject=False)
+        except Exception as e:  # noqa: BLE001
+            result.error = f"mesh twin failed: {type(e).__name__}: {e}"
+            return result
+        result.golden_checked = True
+        result.golden_diffs += [
+            f"[vs mesh-off] {d}"
+            for d in _diff_tokens(result.tokens, mtwin.tokens)
+        ]
     result.slo_failures = cell.slo.check(result.stats)
     return result
 

@@ -60,6 +60,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import LayerKind, ModelConfig
 from repro.core import metrics as core_metrics
@@ -100,6 +101,20 @@ def _dev(x: np.ndarray) -> jax.Array:
     the device may alias the copy, which nothing ever mutates.
     """
     return jnp.asarray(np.array(x, copy=True))
+
+
+def _dev_placed(sharding: NamedSharding):
+    """Mesh-aware `_dev`: hand a scheduler array to every device of the
+    mesh under an explicit sharding (replicated for slot accounting,
+    slot-over-data for token lanes).  The committed placement matches the
+    fused steps' ``in_shardings`` exactly, so dispatch never re-infers or
+    re-shards; the private copy keeps the same anti-aliasing contract as
+    the single-device path."""
+
+    def put(x: np.ndarray) -> jax.Array:
+        return jax.device_put(np.array(x, copy=True), sharding)
+
+    return put
 
 
 @functools.lru_cache(maxsize=None)
@@ -144,6 +159,75 @@ def _jit_copy_block():
     transiently doubles pool memory.  Safe because both drain loops
     rebind ``cache`` to the result and never touch the old reference."""
     return jax.jit(transformer.copy_paged_block, donate_argnums=0)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_jits(cfg: ModelConfig, batch: int, max_len: int,
+                  block_size: int, kv_dtype: str, mesh):
+    """Mesh-partitioned twins of the paged jit factories.
+
+    One compiled step per (config, batch, max_len, block, kv_dtype, mesh)
+    — Mesh is hashable, so engines serving the same shape share traces
+    exactly like the single-device factories.  Every step is invoked with
+    EXPLICIT ``in_shardings``/``out_shardings``: params follow
+    :func:`repro.distributed.sharding.param_shardings` (column/row-parallel
+    projections, expert-parallel MoE stacks), the paged cache follows
+    :func:`~repro.distributed.sharding.paged_cache_shardings` (head-split
+    block pools), tokens follow :func:`~repro.distributed.sharding.batch_spec`
+    (slots over the data axes), and all host-side slot accounting
+    (positions, block tables, lens, masks) plus the logits output stay
+    replicated.  Shapes are derived via ``jax.eval_shape`` — nothing is
+    allocated here.
+    """
+    from repro.distributed import sharding as shard_rules
+
+    p_struct = jax.eval_shape(
+        lambda key: transformer.init_lm(key, cfg), jax.random.PRNGKey(0)
+    )
+    cache_struct = jax.eval_shape(
+        lambda: transformer.init_paged_cache(
+            cfg, batch, max_len, block_size, kv_dtype
+        )
+    )
+    p_sh = shard_rules.serve_param_shardings(p_struct, mesh)
+    cache_sh = shard_rules.paged_cache_shardings(cache_struct, mesh)
+    rep = shard_rules.replicated(mesh)
+    tok = NamedSharding(mesh, shard_rules.batch_spec(mesh, batch, 2))
+    snap_sh = shard_rules.paged_cache_shardings(
+        transformer.slot_state(cache_struct), mesh
+    )
+    decode = jax.jit(
+        lambda p, t, c, pos, bt: transformer.decode_step_paged(
+            p, cfg, t, c, pos, bt, block_size=block_size, kv_dtype=kv_dtype
+        ),
+        in_shardings=(p_sh, tok, cache_sh, rep, rep),
+        out_shardings=(rep, cache_sh),
+    )
+    prefill = jax.jit(
+        lambda p, t, c, pos, bt, lens: transformer.prefill_step_paged(
+            p, cfg, t, c, pos, bt, lens, block_size=block_size,
+            kv_dtype=kv_dtype
+        ),
+        in_shardings=(p_sh, tok, cache_sh, rep, rep, rep),
+        out_shardings=(rep, cache_sh),
+    )
+    reset = jax.jit(
+        transformer.reset_paged_slots,
+        in_shardings=(cache_sh, rep), out_shardings=cache_sh,
+    )
+    copy = jax.jit(
+        transformer.copy_paged_block, donate_argnums=0,
+        in_shardings=(cache_sh, rep, rep), out_shardings=cache_sh,
+    )
+    restore = jax.jit(
+        transformer.restore_slot_state,
+        in_shardings=(cache_sh, snap_sh, rep), out_shardings=cache_sh,
+    )
+    return {
+        "decode": decode, "prefill": prefill, "reset": reset,
+        "copy": copy, "restore": restore, "tok_sharding": tok,
+        "rep_sharding": rep,
+    }
 
 
 class RequestTooLong(ValueError):
@@ -209,7 +293,8 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, spec_k: int = 0,
                  draft_cfg: Optional[ModelConfig] = None,
-                 draft_params=None):
+                 draft_params=None, spec_adaptive: bool = False,
+                 mesh=None):
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
                              f"got {scheduler!r}")
@@ -266,6 +351,22 @@ class ServeEngine:
                 "a draft model was provided but spec_k is 0; pass "
                 "spec_k >= 1 to enable speculative decoding"
             )
+        if spec_adaptive and spec_k == 0:
+            raise ValueError(
+                "spec_adaptive requires speculative decoding (spec_k >= 1)"
+            )
+        if mesh is not None:
+            if scheduler != "continuous":
+                raise ValueError(
+                    "mesh serving requires the continuous scheduler; wave "
+                    "mode is the single-device golden baseline"
+                )
+            for ax in ("data", "model"):
+                if ax not in mesh.axis_names:
+                    raise ValueError(
+                        f"serve mesh must carry ('data', 'model') axes, "
+                        f"got {mesh.axis_names}"
+                    )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -308,12 +409,49 @@ class ServeEngine:
         #: uid -> physical block ids the request occupied, in allocation
         #: order (pool-reuse introspection; continuous scheduler only)
         self.block_history: Dict[int, List[int]] = {}
+        self.mesh = mesh
+        self.spec_adaptive = bool(spec_adaptive)
         self._decode = _jit_decode(cfg)
-        self._decode_paged = _jit_decode_paged(cfg, block_size, kv_dtype)
-        self._prefill_paged = _jit_prefill_paged(cfg, block_size, kv_dtype)
-        self._reset_slots = _jit_reset_slots()
-        self._copy_block = _jit_copy_block()
+        if mesh is None:
+            self._decode_paged = _jit_decode_paged(cfg, block_size, kv_dtype)
+            self._prefill_paged = _jit_prefill_paged(cfg, block_size, kv_dtype)
+            self._reset_slots = _jit_reset_slots()
+            self._copy_block = _jit_copy_block()
+            self._restore_state = None
+            self._dev = _dev
+            self._dev_tok = _dev
+        else:
+            # tensor-parallel serve path: params are placed once by the
+            # Megatron-style rules, every fused step carries explicit
+            # in/out shardings, and host arrays are committed replicated
+            # (tokens: slot-over-data) so no dispatch ever re-infers
+            # placement — sharding is pure placement, never semantics
+            from repro.distributed import sharding as shard_rules
+            self.params = jax.device_put(
+                params, shard_rules.serve_param_shardings(params, mesh)
+            )
+            sj = _sharded_jits(cfg, max_batch, max_len, block_size,
+                               kv_dtype, mesh)
+            self._decode_paged = sj["decode"]
+            self._prefill_paged = sj["prefill"]
+            self._reset_slots = sj["reset"]
+            self._copy_block = sj["copy"]
+            self._restore_state = sj["restore"]
+            rep, tok = sj["rep_sharding"], sj["tok_sharding"]
+            self._dev = _dev_placed(rep)
+            self._dev_tok = _dev_placed(tok)
         self._has_state = any(k != LayerKind.ATTN for k in cfg.superblock)
+        # per-device busy-lane accounting (Eq. 1 one level up): the data
+        # axis shards the slot lanes across device groups when divisible;
+        # otherwise (and with no mesh) there is a single shard and
+        # device_lane_utilization degenerates to slot_utilization
+        n_data = 1
+        if mesh is not None:
+            from repro.launch.mesh import axis_size
+            n_data = axis_size(mesh, "data")
+        self._lane_shards = n_data if max_batch % n_data == 0 else 1
+        self._lanes_per_shard = max_batch // self._lane_shards
+        self.device_busy_lane_steps = np.zeros(self._lane_shards, np.int64)
         self._sampler = SlotSampler(
             cfg.vocab, temperature=self.temperature, top_k=self.top_k,
             seed=self.sample_seed,
@@ -327,6 +465,8 @@ class ServeEngine:
                 draft_cfg, draft_params, self.spec_k, target_cfg=cfg,
                 block_size=block_size, temperature=self.temperature,
                 top_k=self.top_k, seed=self.sample_seed,
+                adaptive=self.spec_adaptive, mesh=mesh,
+                max_batch=max_batch, max_len=max_len,
             )
         else:
             self._spec = None
@@ -348,6 +488,44 @@ class ServeEngine:
     def slot_utilization(self) -> float:
         return core_metrics.slot_utilization(
             self.busy_slot_steps, self.steps, self.max_batch
+        )
+
+    @property
+    def mesh_shape(self) -> Optional[str]:
+        """The mesh as a ``DxM`` string (ledger fork segment), or None
+        when serving single-device."""
+        if self.mesh is None:
+            return None
+        from repro.launch.mesh import axis_size
+        return (f"{axis_size(self.mesh, 'data')}x"
+                f"{axis_size(self.mesh, 'model')}")
+
+    @property
+    def device_lane_utilization(self) -> float:
+        return core_metrics.device_lane_utilization(
+            self.device_busy_lane_steps.tolist(), self.steps,
+            self._lanes_per_shard,
+        )
+
+    def _note_busy(self, busy_flags) -> None:
+        """Fold one fused step's per-slot busy flags into both the global
+        busy-lane counter and the per-device-shard counters (slot ``b``
+        belongs to data shard ``b // lanes_per_shard``, matching
+        `batch_spec`'s contiguous slot-over-data layout)."""
+        flags = [bool(f) for f in busy_flags]
+        self.busy_slot_steps += sum(flags)
+        lps = self._lanes_per_shard
+        for s in range(self._lane_shards):
+            self.device_busy_lane_steps[s] += sum(
+                flags[s * lps:(s + 1) * lps]
+            )
+
+    def _new_cache(self):
+        """A fresh paged cache, placed by the mesh's pool rules when one
+        is active (head-split k/v pools, replicated scale pools)."""
+        return transformer.init_paged_cache(
+            self.cfg, self.max_batch, self.max_len, self.block_size,
+            self.kv_dtype, mesh=self.mesh,
         )
 
     def submit(self, req: Request) -> None:
@@ -386,9 +564,7 @@ class ServeEngine:
             )
             jax.block_until_ready(out[0])
             return
-        cache = transformer.init_paged_cache(
-            self.cfg, B, self.max_len, self.block_size, self.kv_dtype
-        )
+        cache = self._new_cache()
         pos = jnp.zeros((B,), jnp.int32)
         bt = jnp.zeros((B, self.max_len // self.block_size), jnp.int32)
         if self.prefill_chunk > 1:
@@ -514,7 +690,9 @@ class ServeEngine:
 
         for t in range(horizon - 1):
             self._call_hooks(busy=True)  # arrivals land in the NEXT wave
-            self.busy_slot_steps += sum(1 for r in wave if not r.done)
+            self._note_busy(
+                [not r.done for r in wave] + [False] * (B - len(wave))
+            )
             logits, cache = self._decode(self.params, _dev(tokens), cache)
             self.steps += 1
             slots = list(wave) + [None] * (B - len(wave))
@@ -564,9 +742,7 @@ class ServeEngine:
     def _drain_continuous(self, max_steps: Optional[int]) -> None:
         B, bs = self.max_batch, self.block_size
         nb_slot = self.max_len // bs
-        cache = transformer.init_paged_cache(
-            self.cfg, B, self.max_len, bs, self.kv_dtype
-        )
+        cache = self._new_cache()
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
         pool = BlockPool(1 + B * nb_slot, bs,
@@ -650,15 +826,13 @@ class ServeEngine:
                                 int(positions[b]) % bs,
                             )
                 if self._has_state and reset_mask.any():
-                    cache = self._reset_slots(cache, _dev(reset_mask))
+                    cache = self._reset_slots(cache, self._dev(reset_mask))
                 reset_mask[:] = False
 
-                self.busy_slot_steps += sum(
-                    1 for r in slot_req if r is not None
-                )
+                self._note_busy(r is not None for r in slot_req)
                 logits, cache = self._decode_paged(
-                    self.params, _dev(tokens), cache,
-                    _dev(positions), _dev(block_tables),
+                    self.params, self._dev_tok(tokens), cache,
+                    self._dev(positions), self._dev(block_tables),
                 )
                 self.steps += 1
                 nxt = self._sampler.select(logits, slot_req)[:, 0]
@@ -722,9 +896,7 @@ class ServeEngine:
         """
         B, bs, C = self.max_batch, self.block_size, self.prefill_chunk
         nb_slot = self.max_len // bs
-        cache = transformer.init_paged_cache(
-            self.cfg, B, self.max_len, bs, self.kv_dtype
-        )
+        cache = self._new_cache()
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
         pool = BlockPool(1 + B * nb_slot, bs,
@@ -828,10 +1000,10 @@ class ServeEngine:
                                 max(gen_from, j * bs) % bs,
                             )
                 if self._has_state and reset_mask.any():
-                    cache = self._reset_slots(cache, _dev(reset_mask))
+                    cache = self._reset_slots(cache, self._dev(reset_mask))
                 reset_mask[:] = False
 
-                self.busy_slot_steps += int((lengths > 0).sum())
+                self._note_busy(lengths > 0)
                 # disaggregated dispatch: a step with no prefill chunk in
                 # flight (every busy slot advances exactly 1 token) runs
                 # the native 1-wide decode step — decode never pays a
@@ -849,15 +1021,15 @@ class ServeEngine:
                 )
                 if pure_decode:
                     logits, cache = self._decode_paged(
-                        self.params, _dev(tokens[:, :1]), cache,
-                        _dev(positions), _dev(block_tables),
+                        self.params, self._dev_tok(tokens[:, :1]), cache,
+                        self._dev(positions), self._dev(block_tables),
                     )
                 else:
                     w = _bucket_width(int(lengths.max()), C)
                     logits, cache = self._prefill_paged(
-                        self.params, _dev(tokens[:, :w]), cache,
-                        _dev(positions), _dev(block_tables),
-                        _dev(lengths),
+                        self.params, self._dev_tok(tokens[:, :w]), cache,
+                        self._dev(positions), self._dev(block_tables),
+                        self._dev(lengths),
                     )
                 self.steps += 1
                 # one transfer: select from each slot's LAST fed row (only
@@ -934,6 +1106,15 @@ class ServeEngine:
             "prefill_budget": self.prefill_budget,
             "kv_dtype": self.kv_dtype,
             "share_prefixes": self.share_prefixes,
+            # mesh placement: the DxM shape string keys the +mesh<DxM>
+            # ledger fork; device_lane_utilization is Eq. 1 one level up
+            # (worst device shard's busy-lane fraction — deterministic
+            # slot accounting, gated at tol 0)
+            "mesh": self.mesh_shape,
+            "mesh_devices": (self.mesh.devices.size
+                             if self.mesh is not None else 1),
+            "device_lane_utilization": self.device_lane_utilization,
+            "spec_adaptive": self.spec_adaptive,
             "requests": len(self.completed),
             "new_tokens": new_tokens,
             "fused_steps": self.steps,

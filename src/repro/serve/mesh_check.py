@@ -1,0 +1,200 @@
+"""Cross-mesh golden harness: serve the same traffic on every mesh shape
+and demand byte-identical token streams.
+
+The tentpole contract of tensor-parallel serving is that the mesh is
+invisible in the tokens: sharding attention heads, MoE experts, and the
+paged KV block pool over a ``("data", "model")`` mesh may move the math
+across devices but must never change it.  This module is the executable
+form of that contract — ``run_check`` serves one seeded workload per
+architecture on each requested mesh shape (``None`` = the unsharded
+engine) and diffs every stream against the unsharded baseline,
+uid-for-uid, token-for-token.
+
+Because host platforms only expose multiple devices when
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` is set *before*
+jax initializes, multi-device checks run this module as a SUBPROCESS::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        python -m repro.serve.mesh_check --meshes none,1x1,2x1,1x2,2x2
+
+The JSON verdict on stdout carries per-(arch, mesh) stream digests, the
+diff list (empty = contract holds), and per-device utilization — both
+the CI mesh-smoke job and tests/test_sharded_serve.py consume it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+#: (name, arch, engine-kwargs overrides) — the six golden-verified serve
+#: architectures plus the composition cells the ISSUE pins: quantized
+#: paging + prefix sharing + speculation must survive sharding too.
+DEFAULT_WORKLOADS = (
+    ("gpt2", "gpt2-124m", {}),
+    ("qwen3", "qwen3-1.7b", {}),
+    ("mamba2", "mamba2-370m", {}),
+    ("mla", "deepseek-v2-lite-16b", {}),
+    ("moe", "deepseek-moe-16b", {}),
+    ("jamba", "jamba-1.5-large-398b", {}),
+    ("gpt2-int8-shared", "gpt2-124m",
+     {"kv_dtype": "int8", "share_prefixes": True, "shared_prefix_len": 6}),
+    ("gpt2-spec", "gpt2-124m", {"spec_k": 2, "draft": "gpt2-124m"}),
+    ("gpt2-spec-adapt", "gpt2-124m",
+     {"spec_k": 2, "draft": "gpt2-124m", "spec_adaptive": True}),
+)
+
+
+def _mesh_from_shape(shape: Optional[str]):
+    if shape is None:
+        return None
+    from repro.launch.mesh import make_serve_mesh, parse_mesh
+
+    return make_serve_mesh(*parse_mesh(shape))
+
+
+def serve_workload(arch: str, mesh, *, requests: int = 4, max_new: int = 8,
+                   max_batch: int = 2, max_len: int = 64,
+                   block_size: int = 8, seed: int = 0,
+                   kv_dtype: str = "f32", share_prefixes: bool = False,
+                   shared_prefix_len: int = 0, spec_k: int = 0,
+                   draft: Optional[str] = None,
+                   spec_adaptive: bool = False) -> Dict[str, Any]:
+    """Serve one seeded workload; returns streams + engine stats.
+
+    Traffic depends only on (arch, seed, sizing) — never on the mesh —
+    so the same call with a different ``mesh`` is a golden twin.
+    """
+    import jax
+
+    import repro.configs as configs
+    from repro.serve.engine import Request, ServeEngine
+    from repro.train import steps as steps_mod
+
+    cfg = configs.get_smoke_config(arch)
+    params = steps_mod.init_model(jax.random.PRNGKey(seed), cfg)
+    draft_cfg = draft_params = None
+    if spec_k > 0:
+        draft_cfg = configs.get_smoke_config(draft or arch)
+        draft_params = steps_mod.init_model(jax.random.PRNGKey(seed),
+                                            draft_cfg)
+    engine = ServeEngine(
+        cfg, params, max_batch=max_batch, max_len=max_len,
+        scheduler="continuous", block_size=block_size, kv_dtype=kv_dtype,
+        share_prefixes=share_prefixes, spec_k=spec_k, draft_cfg=draft_cfg,
+        draft_params=draft_params, spec_adaptive=spec_adaptive, mesh=mesh,
+    )
+    rng = np.random.default_rng(seed)
+    prefix = (rng.integers(0, cfg.vocab, size=shared_prefix_len)
+              .astype(np.int32) if shared_prefix_len > 0 else None)
+    for uid in range(requests):
+        plen = int(rng.integers(3, 10))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
+        engine.submit(Request(uid=uid, prompt=prompt,
+                              max_new_tokens=max_new))
+    done = engine.run_until_drained()
+    stats = engine.stats()
+    return {
+        "streams": {int(u): [int(t) for t in r.generated]
+                    for u, r in done.items()},
+        "mesh": engine.mesh_shape,
+        "device_lane_utilization": stats["device_lane_utilization"],
+        "mesh_devices": stats["mesh_devices"],
+        "fused_steps": stats["fused_steps"],
+        "drafted_tokens": stats.get("drafted_tokens", 0),
+        "physical_blocks": stats.get("physical_blocks", 0),
+        "logical_blocks": stats.get("logical_blocks", 0),
+    }
+
+
+def _digest(streams: Dict[int, List[int]]) -> str:
+    blob = json.dumps({str(k): streams[k] for k in sorted(streams)},
+                      sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def run_check(meshes: Sequence[Optional[str]],
+              workloads=DEFAULT_WORKLOADS, *, requests: int = 4,
+              max_new: int = 8, seed: int = 0) -> Dict[str, Any]:
+    """Serve every workload on every mesh shape; diff against unsharded.
+
+    The ``None`` baseline is always run (prepended when absent) — it is
+    the stream every meshed run must reproduce byte-for-byte.
+    """
+    shapes = list(meshes)
+    if None not in shapes:
+        shapes.insert(0, None)
+    results: Dict[str, Any] = {"workloads": {}, "diffs": [], "shapes": [
+        s or "none" for s in shapes]}
+    for name, arch, overrides in workloads:
+        per_mesh: Dict[str, Any] = {}
+        baseline = None
+        for shape in shapes:
+            out = serve_workload(arch, _mesh_from_shape(shape),
+                                 requests=requests, max_new=max_new,
+                                 seed=seed, **overrides)
+            per_mesh[shape or "none"] = {
+                "digest": _digest(out["streams"]),
+                "device_lane_utilization": out["device_lane_utilization"],
+                "mesh_devices": out["mesh_devices"],
+                "fused_steps": out["fused_steps"],
+                "drafted_tokens": out["drafted_tokens"],
+            }
+            if shape is None:
+                baseline = out["streams"]
+            else:
+                for uid in sorted(baseline):
+                    got = out["streams"].get(uid)
+                    if got != baseline[uid]:
+                        results["diffs"].append(
+                            f"{name}@{shape}: uid {uid} diverged "
+                            f"({got} != {baseline[uid]})")
+        results["workloads"][name] = per_mesh
+    results["ok"] = not results["diffs"]
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--meshes", default="none,1x1,2x1,1x2,2x2",
+                    help="comma list of DxM shapes ('none' = unsharded "
+                         "baseline; always included)")
+    ap.add_argument("--workloads", default=None,
+                    help="comma list of workload names to run "
+                         "(default: all)")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the verdict here "
+                    "instead of stdout")
+    args = ap.parse_args(argv)
+    shapes = [None if s in ("none", "") else s
+              for s in args.meshes.split(",")]
+    workloads = DEFAULT_WORKLOADS
+    if args.workloads:
+        want = set(args.workloads.split(","))
+        unknown = want - {w[0] for w in DEFAULT_WORKLOADS}
+        if unknown:
+            ap.error(f"unknown workloads: {sorted(unknown)}")
+        workloads = tuple(w for w in DEFAULT_WORKLOADS if w[0] in want)
+    verdict = run_check(shapes, workloads, requests=args.requests,
+                        max_new=args.max_new, seed=args.seed)
+    blob = json.dumps(verdict, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob)
+        print(f"mesh check {'OK' if verdict['ok'] else 'FAILED'} "
+              f"-> {args.out}")
+    else:
+        print(blob)
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

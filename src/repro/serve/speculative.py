@@ -86,6 +86,13 @@ def _jit_restore_state():
     return jax.jit(transformer.restore_slot_state)
 
 
+def _draft_param_shardings(params, mesh):
+    """Megatron rules applied to the draft's params (same rule table as
+    the target — the draft is a plain attention LM)."""
+    from repro.distributed import sharding as shard_rules
+    return shard_rules.serve_param_shardings(params, mesh)
+
+
 class SpeculativeDecoder:
     """Draft model + verification drain for one :class:`ServeEngine`.
 
@@ -95,9 +102,20 @@ class SpeculativeDecoder:
     ``eng`` handle passed to :meth:`drain`.
     """
 
+    #: EMA weight for the trailing per-request acceptance rate; 0.5 adapts
+    #: within a couple of verification windows (smoke traces are short)
+    _ALPHA = 0.5
+    #: additive re-probe rate for a stream whose width collapsed to 0 —
+    #: a few plain decode steps later it drafts width >= 1 again, so a
+    #: distribution shift is never locked out (deterministic, no RNG)
+    _RECOVERY = 0.125
+
     def __init__(self, draft_cfg: ModelConfig, draft_params, k: int, *,
                  target_cfg: ModelConfig, block_size: int,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 adaptive: bool = False, mesh=None,
+                 max_batch: Optional[int] = None,
+                 max_len: Optional[int] = None):
         if k < 1:
             raise ValueError(f"spec_k must be >= 1, got {k}")
         if any(kind != LayerKind.ATTN for kind in draft_cfg.superblock):
@@ -110,6 +128,11 @@ class SpeculativeDecoder:
         self.params = draft_params
         self.k = int(k)
         self.block_size = block_size
+        self.adaptive = bool(adaptive)
+        self.mesh = mesh
+        # uid -> EMA of the trailing acceptance rate; absent = optimistic
+        # 1.0 (first window drafts full width, like non-adaptive mode)
+        self._accept_ema = {}
         # proposals must be valid token ids for BOTH models, and tokens
         # fed back into the draft are clamped to its vocab below
         self.shared_vocab = min(draft_cfg.vocab, target_cfg.vocab)
@@ -117,8 +140,49 @@ class SpeculativeDecoder:
             self.shared_vocab, temperature=temperature, top_k=top_k,
             seed=seed,
         )
-        self._prefill = _jit_draft_prefill(draft_cfg, block_size)
+        if mesh is None:
+            self._prefill = _jit_draft_prefill(draft_cfg, block_size)
+        else:
+            # the draft's fused step gets the same explicit-sharding
+            # treatment as the target's (attention-only cfg: only the
+            # k/v head-split pool rules fire on its cache)
+            from repro.serve.engine import _sharded_jits
+            self._prefill = _sharded_jits(
+                draft_cfg, int(max_batch), int(max_len), block_size,
+                "f32", mesh,
+            )["prefill"]
+            self.params = jax.device_put(
+                draft_params, _draft_param_shardings(draft_params, mesh)
+            )
         self._restore = _jit_restore_state()
+
+    def _draft_width(self, uid: int) -> int:
+        """Per-slot draft width from the trailing acceptance EMA, clamped
+        to [0, spec_k].  Non-adaptive engines always draft full width.
+
+        A rejection-heavy stream shrinks toward 0 (plain decode — no
+        drafted lanes burned), a well-predicted one grows back toward
+        ``k``; a collapsed stream re-probes via the additive
+        ``_RECOVERY`` schedule.  Width only changes how FAR we draft,
+        never what verification accepts, so served streams are identical
+        to the fixed-width engine's.
+        """
+        if not self.adaptive:
+            return self.k
+        ema = self._accept_ema.get(uid, 1.0)
+        w = int(round(ema * self.k))
+        if w <= 0:
+            self._accept_ema[uid] = min(1.0, ema + self._RECOVERY)
+        return max(0, min(self.k, w))
+
+    def _note_accept(self, uid: int, accepted: int, drafted: int) -> None:
+        """Fold one verification window's acceptance into the uid's EMA."""
+        if not self.adaptive or drafted <= 0:
+            return
+        ema = self._accept_ema.get(uid, 1.0)
+        self._accept_ema[uid] = (
+            (1.0 - self._ALPHA) * ema + self._ALPHA * accepted / drafted
+        )
 
     def _clamp(self, tokens: np.ndarray) -> np.ndarray:
         """Token ids the draft embeds must lie inside ITS vocab; target
@@ -132,7 +196,8 @@ class SpeculativeDecoder:
         :meth:`ServeEngine.warmup`, which warms the target side)."""
         B = eng.max_batch
         dcache = transformer.init_paged_cache(
-            self.cfg, B, eng.max_len, self.block_size, "f32"
+            self.cfg, B, eng.max_len, self.block_size, "f32",
+            mesh=eng.mesh,
         )
         out = self._prefill(
             self.params, jnp.zeros((B, 1), jnp.int32), dcache,
@@ -161,16 +226,16 @@ class SpeculativeDecoder:
         """
         # engine.py never imports this module at definition time (the
         # ServeEngine ctor imports it lazily), so this is one-directional
-        from repro.serve.engine import _dev, _MAX_IDLE_SPINS
+        from repro.serve.engine import _MAX_IDLE_SPINS
 
+        _dev, _dev_tok = eng._dev, eng._dev_tok  # mesh-aware placement
+        restore = eng._restore_state or self._restore
         B, bs, k = eng.max_batch, eng.block_size, self.k
         W = k + 1
         nb_slot = eng.max_len // bs
-        cache = transformer.init_paged_cache(
-            eng.cfg, B, eng.max_len, bs, eng.kv_dtype
-        )
+        cache = eng._new_cache()
         dcache = transformer.init_paged_cache(
-            self.cfg, B, eng.max_len, bs, "f32"
+            self.cfg, B, eng.max_len, bs, "f32", mesh=eng.mesh
         )
         positions = np.zeros(B, np.int32)
         block_tables = np.zeros((B, nb_slot), np.int32)  # 0 = null block
@@ -229,12 +294,15 @@ class SpeculativeDecoder:
                     t = int(positions[b])
                     n_rem = len(r.prompt) + len(r.generated) - t
                     if n_rem == 1:
-                        # generating: draft as far as the token budget and
-                        # the slot's cache allow (the window writes through
-                        # position t + spec_w, which must stay < max_len)
+                        # generating: draft as far as the token budget,
+                        # the slot's cache, and (adaptive mode) the uid's
+                        # trailing-acceptance width allow (the window
+                        # writes through position t + spec_w, which must
+                        # stay < max_len)
                         remaining = r.max_new_tokens - len(r.generated)
                         spec_w[b] = max(
-                            0, min(k, remaining - 1, eng.max_len - 1 - t)
+                            0, min(self._draft_width(r.uid),
+                                   remaining - 1, eng.max_len - 1 - t)
                         )
                 any_spec = bool((spec_w > 0).any())
 
@@ -279,9 +347,7 @@ class SpeculativeDecoder:
                 if eng._has_state and reset_mask.any():
                     cache = eng._reset_slots(cache, _dev(reset_mask))
                 reset_mask[:] = False
-                eng.busy_slot_steps += sum(
-                    1 for r in slot_req if r is not None
-                )
+                eng._note_busy(r is not None for r in slot_req)
 
                 # -- draft phase: sequential 1-wide proposals ----------------
                 # round 0 feeds every busy slot's current token (keeping the
@@ -308,7 +374,7 @@ class SpeculativeDecoder:
                             d_lens[b] = 1
                             d_tokens[b, 0] = drafts[b, i - 1]
                     dlogits, dcache = self._prefill(
-                        self.params, _dev(self._clamp(d_tokens)), dcache,
+                        self.params, _dev_tok(self._clamp(d_tokens)), dcache,
                         _dev(positions + i), _dev(block_tables),
                         _dev(d_lens),
                     )
@@ -337,7 +403,7 @@ class SpeculativeDecoder:
                     snap = (transformer.slot_state(cache)
                             if eng._has_state else None)
                     logits, cache = eng._prefill_paged(
-                        eng.params, _dev(v_tokens), cache,
+                        eng.params, _dev_tok(v_tokens), cache,
                         _dev(positions), _dev(block_tables), _dev(v_lens),
                     )
                     eng.steps += 1
@@ -347,7 +413,7 @@ class SpeculativeDecoder:
                     y = eng._sampler.select(logits, uids_gen)
                 else:
                     logits, cache = eng._decode_paged(
-                        eng.params, _dev(tokens), cache,
+                        eng.params, _dev_tok(tokens), cache,
                         _dev(positions), _dev(block_tables),
                     )
                     eng.steps += 1
@@ -390,6 +456,7 @@ class SpeculativeDecoder:
                     eng.drafted_tokens += w_b
                     eng.accepted_tokens += a
                     eng.rejected_tokens += w_b - a
+                    self._note_accept(r.uid, a, w_b)
                     # emit the accepted prefix plus the correction token,
                     # stopping at EOS / budget exactly like 1-wide decode
                     emitted = 0
@@ -426,9 +493,9 @@ class SpeculativeDecoder:
                 # rejected slots and replay their accepted tokens -----------
                 if eng._has_state and any_spec and replay_lens.any():
                     mask = replay_lens > 0
-                    cache = self._restore(cache, snap, _dev(mask))
+                    cache = restore(cache, snap, _dev(mask))
                     _, cache = eng._prefill_paged(
-                        eng.params, _dev(v_tokens), cache,
+                        eng.params, _dev_tok(v_tokens), cache,
                         _dev(pos0), _dev(block_tables), _dev(replay_lens),
                     )
                     eng.steps += 1

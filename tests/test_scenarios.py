@@ -12,6 +12,7 @@
 * SLO violations fail the cell and the gate CLI exits non-zero.
 """
 
+import dataclasses
 import json
 import os
 import pathlib
@@ -506,3 +507,67 @@ def test_cli_gate_fails_on_no_match():
          "--only", "no-such-cell"],
         capture_output=True, text=True, env=_cli_env())
     assert proc.returncode == 2
+
+
+# ---------------------------------------------------------------------------
+# device-mesh axis (tensor-parallel serving)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_axis_expansion_and_shared_traffic():
+    from repro.launch.mesh import MeshShapeError
+    from repro.scenarios.matrix import full_matrix
+
+    spec = _tiny_matrix(schedulers=["wave", "continuous"],
+                        meshes=[None, "1x1"])
+    cells = spec.cells()
+    # wave never shards (the paged continuous path owns the mesh)
+    assert not [c for c in cells if c.mesh and c.scheduler == "wave"]
+    meshed = [c for c in cells if c.mesh == "1x1"]
+    plain = [c for c in cells if c.mesh is None
+             and c.scheduler == "continuous"]
+    assert len(meshed) == 1 and len(plain) == 1
+    # the mesh axis is outside the traffic key: twin pairs sample
+    # byte-identical requests, and the cell id grows an m<DxM> segment
+    assert meshed[0].traffic_key == plain[0].traffic_key
+    assert meshed[0].seed == plain[0].seed
+    assert meshed[0].cell_id == plain[0].cell_id + "/m1x1"
+    assert meshed[0].mesh_twin().cell_id == plain[0].cell_id
+    # junk shapes die at construction, not at serve time
+    with pytest.raises(MeshShapeError):
+        dataclasses.replace(meshed[0], mesh="2x2x2")
+    # the wide matrix carries the mesh axis; the CI smoke matrix doesn't
+    assert any(c.mesh == "1x1" for c in full_matrix().cells())
+    assert all(c.mesh is None for c in smoke_matrix().cells())
+
+
+def test_mesh_cell_matches_unsharded_twin():
+    r = run_cell(_cell(meshes=["1x1"]))
+    assert r.error == ""
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["mesh"] == "1x1"
+    assert r.stats["mesh_devices"] == 1
+    assert r.stats["device_lane_utilization"] > 0
+    assert r.report()["mesh"] == "1x1"
+
+
+def test_mesh_device_loss_cell_restarts_resharded():
+    # device loss on a meshed cell: the resilient loop rebuilds the
+    # engine (re-entering the mesh cache is the resharding-on-restart
+    # path) and the streams still match the fault-free unsharded twin
+    r = run_cell(_cell("device-loss", meshes=["1x1"]))
+    assert r.error == ""
+    assert r.restarts >= 1, "the simulated device loss must actually fire"
+    assert r.golden_checked and r.golden_ok, r.golden_diffs
+    assert r.stats["mesh"] == "1x1"
+    assert r.stats["device_lane_utilization"] > 0
+
+
+def test_mesh_cell_ledger_key_forks(tmp_path):
+    cell = _cell(meshes=["1x1"])
+    r = run_cell(cell)
+    rows = metrics_from_scenario(r.report())
+    (key,) = rows
+    assert key == f"scenario/{cell.cell_id}"
+    assert key.endswith("/m1x1")
+    assert rows[key]["device_lane_utilization"] > 0

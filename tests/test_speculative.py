@@ -328,3 +328,70 @@ def test_spec_cell_survives_preemption():
     assert r.golden_checked and r.golden_ok, r.golden_diffs
     assert r.stats["preemptions"] >= 1
     assert r.stats["drafted_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive draft width: per-slot spec_k from the trailing acceptance EMA
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_width_streams_identical_drafts_fewer():
+    """Against an adversarial (rejection-heavy) draft, the adaptive
+    engine shrinks per-slot draft width toward plain decode — strictly
+    fewer drafted tokens than fixed width — while serving the exact
+    same streams (width changes how FAR we draft, never what
+    verification accepts)."""
+    base = _serve("gpt2-124m", max_new=8)
+    fixed = _serve("gpt2-124m", spec_k=3,
+                   draft=_model("gpt2-124m", init_seed=123), max_new=8)
+    adapt = _serve("gpt2-124m", spec_k=3,
+                   draft=_model("gpt2-124m", init_seed=123),
+                   spec_adaptive=True, max_new=8)
+    assert _streams(adapt) == _streams(base)
+    assert _streams(adapt) == _streams(fixed)
+    sf, sa = fixed.stats(), adapt.stats()
+    assert sf["acceptance_rate"] < 1.0, "draft must actually be adversarial"
+    assert 0 < sa["drafted_tokens"] < sf["drafted_tokens"], (
+        "adaptive width must burn strictly fewer drafted lanes")
+    assert sa["spec_adaptive"] is True and sf["spec_adaptive"] is False
+
+
+def test_adaptive_width_keeps_full_width_on_self_draft():
+    """Self-speculation accepts everything, so the EMA stays at 1.0 and
+    the adaptive engine drafts exactly like the fixed-width one."""
+    fixed = _serve("gpt2-124m", spec_k=3, draft=_model("gpt2-124m"))
+    adapt = _serve("gpt2-124m", spec_k=3, draft=_model("gpt2-124m"),
+                   spec_adaptive=True)
+    assert _streams(adapt) == _streams(fixed)
+    assert adapt.stats()["acceptance_rate"] == 1.0
+    assert adapt.stats()["drafted_tokens"] == fixed.stats()["drafted_tokens"]
+
+
+def test_adaptive_ema_clamps_and_recovers():
+    """Width algebra: EMA folds accept ratios, clamps to [0, k], and a
+    collapsed slot re-probes via the additive recovery schedule."""
+    eng = _serve("gpt2-124m", spec_k=4, draft=_model("gpt2-124m"),
+                 spec_adaptive=True, n=1, max_new=2)
+    spec = eng._spec
+    uid = 999
+    assert spec._draft_width(uid) == 4  # fresh slot: full width
+    for _ in range(8):  # hammer with total rejection
+        spec._note_accept(uid, 0, 4)
+    assert spec._accept_ema[uid] < 0.1
+    w = spec._draft_width(uid)
+    assert w == 0, "collapsed EMA must fall back to plain decode"
+    # the zero-width probe bumps the EMA back up until width recovers
+    for _ in range(32):
+        if spec._draft_width(uid) > 0:
+            break
+    assert spec._draft_width(uid) >= 1, "recovery schedule must re-probe"
+    # and the width never leaves [0, k]
+    spec._accept_ema[uid] = 5.0
+    assert spec._draft_width(uid) == 4
+
+
+def test_adaptive_requires_speculation():
+    cfg, params = _model("gpt2-124m")
+    with pytest.raises(ValueError, match="spec_adaptive"):
+        ServeEngine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                    scheduler="continuous", spec_adaptive=True)
